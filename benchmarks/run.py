@@ -1,0 +1,167 @@
+"""Benchmark harness — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the table's own
+headline metric).  Sizes are scaled to the CPU container; on a real TPU
+slice the same functions run the paper-scale problems.
+
+  PYTHONPATH=src python -m benchmarks.run [table7|table8|table9|table10|
+                                           interconnect|kernels|roofline|all]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def table7_hpl():
+    """Paper Table 7: HPL (high-precision blocked LU)."""
+    from repro.core.hpl import run_hpl
+    r = run_hpl(n=768, nb=128)
+    emit("table7.hpl_fp32", r["time_s"] * 1e6,
+         f"gflops={r['gflops']:.2f};residual={r['residual']:.2e};"
+         f"passed={r['passed']}")
+
+
+def table8_hpcg():
+    """Paper Table 8: HPCG (27-pt stencil preconditioned CG)."""
+    from repro.core.hpcg import run_hpcg
+    r = run_hpcg(48, 48, 48, max_iters=90)
+    emit("table8.hpcg", r["time_s"] * 1e6,
+         f"gflops={r['gflops']:.2f};bw_gbs={r['bandwidth_gbs']:.2f};"
+         f"rel_resid={r['rel_residual']:.2e};converged={r['converged']}")
+
+
+def table9_hplmxp():
+    """Paper Table 9: HPL-MxP (low-precision LU + iterative refinement).
+    Reports the low-vs-high precision speed ratio (paper: 10× FP8 vs FP64;
+    CPU container has no MXU so the ratio here only shows structure)."""
+    from repro.core.hpl import run_hpl
+    from repro.core.hplmxp import run_hplmxp
+    hi = run_hpl(n=768, nb=128)
+    for prec in ("bf16", "fp8"):
+        r = run_hplmxp(n=768, nb=128, lowprec=prec, ir_iters=4)
+        # NOTE: CPU has no low-precision compute units, so the paper's 10×
+        # FP8 speedup cannot appear here; the structural claims (same O(n³)
+        # factor work, O(n²) IR overhead, validation passes) are the test.
+        emit(f"table9.hplmxp_{prec}", r["time_s"] * 1e6,
+             f"gflops={r['gflops']:.2f};lu_only_gflops={r['gflops_lu_only']:.2f};"
+             f"lu_speedup_vs_fp32={hi['time_s'] / r['lu_time_s']:.2f};"
+             f"residual={r['residual']:.2e};passed={r['passed']}")
+
+
+def table10_io500():
+    """Paper Table 10: IO500 phases, few-worker vs many-worker (the paper's
+    10-node vs 96-node scaling observation)."""
+    from repro.core.io500 import run_io500
+    for nproc in (2, 8):
+        r = run_io500(nproc=nproc, mb_per_proc=16, files_per_proc=150)
+        emit(f"table10.io500_np{nproc}", 0.0,
+             f"score={r['total_score']:.2f};bw_gibs={r['bandwidth_score_gibs']:.2f};"
+             f"kiops={r['iops_score_kiops']:.2f};"
+             f"easy_w={r['ior_easy']['write_gibs']:.2f};"
+             f"hard_w={r['ior_hard']['write_gibs']:.3f};"
+             f"stat_kiops={r['mdtest']['stat_kiops']:.1f}")
+
+
+def interconnect_table():
+    """Paper §2.2 (Tables 3-4 context): rail-optimized vs flat collectives
+    on the topology cost model, for the production gradient sizes."""
+    from repro.core import topology
+    for gb, label in ((0.5e9, "0.5GB"), (4e9, "4GB"), (16e9, "16GB")):
+        per_chip = gb / 512
+        hier, parts = topology.hierarchical_allreduce_cost(per_chip, 16, 2)
+        flat = topology.flat_allreduce_cost(per_chip, 16, 2)
+        comp = (parts["reduce_scatter"] + parts["all_gather"]
+                + parts["cross_pod"] / 4)          # int8 cross-pod payload
+        emit(f"interconnect.allreduce_{label}", hier * 1e6,
+             f"flat_us={flat * 1e6:.1f};hier_us={hier * 1e6:.1f};"
+             f"hier_int8_us={comp * 1e6:.1f};speedup={flat / hier:.1f}x")
+
+
+def kernels_table():
+    """Kernel wrappers vs oracles (CPU: correctness-bench; timings are the
+    jnp reference path — Pallas timings need a TPU)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.core.mixed_precision import fp8_matmul as fp8_jnp
+
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (512, 512), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (512, 512), jnp.float32)
+
+    f32 = jax.jit(lambda x, y: x @ y)
+    f8 = jax.jit(fp8_jnp)
+    for name, fn in (("kernels.matmul_f32", f32), ("kernels.matmul_fp8", f8)):
+        fn(a, b).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(10):
+            out = fn(a, b)
+        out.block_until_ready()
+        us = (time.perf_counter() - t0) / 10 * 1e6
+        flops = 2 * 512 ** 3
+        emit(name, us, f"gflops={flops / us / 1e3:.2f}")
+
+    q = jax.random.normal(key, (8, 256, 64), jnp.bfloat16)
+    att = jax.jit(lambda q: ref.attention_ref(q, q, q, causal=True))
+    att(q).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        out = att(q)
+    out.block_until_ready()
+    emit("kernels.attention_ref", (time.perf_counter() - t0) / 10 * 1e6,
+         "oracle-path")
+
+
+def roofline_table():
+    """Deliverable (g): per-cell roofline terms from the dry-run artifacts
+    (run `python -m repro.launch.dryrun --all` first)."""
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+    if not os.path.isdir(d):
+        emit("roofline.missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for fn in sorted(os.listdir(d)):
+        if not fn.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(d, fn)))
+        if not r.get("supported", False):
+            emit(f"roofline.{fn[:-5]}", 0.0, f"skipped:{r.get('skip_reason','')[:40]}")
+            continue
+        if "roofline" not in r:
+            continue
+        rt = r["roofline"]
+        emit(f"roofline.{fn[:-5]}", rt["step_s"] * 1e6,
+             f"dominant={rt['dominant']};compute_s={rt['compute_s']:.4f};"
+             f"memory_s={rt['memory_s']:.4f};collective_s={rt['collective_s']:.4f}")
+
+
+TABLES = {
+    "table7": table7_hpl,
+    "table8": table8_hpcg,
+    "table9": table9_hplmxp,
+    "table10": table10_io500,
+    "interconnect": interconnect_table,
+    "kernels": kernels_table,
+    "roofline": roofline_table,
+}
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    names = TABLES if which == "all" else {which: TABLES[which]}
+    print("name,us_per_call,derived")
+    for name, fn in names.items():
+        fn()
+
+
+if __name__ == "__main__":
+    main()

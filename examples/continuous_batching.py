@@ -1,0 +1,49 @@
+"""Continuous-batching serving demo: a stream of mixed-length requests
+flows through a fixed pool of KV-cache slots; slots are re-admitted as
+requests finish (no head-of-line blocking on the longest generation).
+
+  PYTHONPATH=src python examples/continuous_batching.py --arch qwen3-1.7b
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models import model as M
+from repro.runtime.serving import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch))
+    params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, slots=args.slots, max_len=96)
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        gen = int(rng.integers(4, 20))
+        eng.submit(rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                   max_new_tokens=gen)
+    done = eng.run()
+    wall = time.perf_counter() - t0
+
+    total_toks = sum(len(r.generated) for r in done)
+    print(f"served {len(done)} requests / {total_toks} tokens "
+          f"in {wall:.2f}s on {args.slots} slots")
+    for r in done[:5]:
+        ttft = (r.t_first_token - r.t_submit) * 1e3
+        print(f"  req{r.rid}: prompt={len(r.prompt):2d} "
+              f"gen={len(r.generated):2d} ttft={ttft:6.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: build a model, run a forward pass, take one training step.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch qwen3-1.7b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config, make_example_batch
+from repro.models import model as M
+from repro.optim.adamw import adamw_update, init_opt_state
+from repro.parallel.sharding import SINGLE_DEVICE_RULES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    args = ap.parse_args()
+
+    # 1. Config: the exact assigned architecture, reduced for CPU.
+    cfg = reduced_config(get_config(args.arch))
+    print(f"arch={cfg.name} family={cfg.family} layers={cfg.num_layers} "
+          f"d_model={cfg.d_model}")
+
+    # 2. Parameters from the spec tree (logical axes drive sharding on TPU).
+    specs = M.param_specs(cfg)
+    params = M.init_params(specs, jax.random.PRNGKey(0))
+    from repro.models.modules import count_params
+    print(f"params: {count_params(specs):,}")
+
+    # 3. Forward + loss.
+    opts = M.RunOptions(q_chunk=32, xent_chunk=32)
+    batch = make_example_batch(cfg, "train", batch=2, seq=64)
+    loss, metrics = jax.jit(
+        lambda p, b: M.lm_loss(p, cfg, b, SINGLE_DEVICE_RULES, opts))(params, batch)
+    print(f"initial loss={float(loss):.4f} (ln V = "
+          f"{jnp.log(cfg.vocab_size):.4f})")
+
+    # 4. One AdamW step.
+    opt = init_opt_state(params)
+    (loss2, _), grads = jax.jit(jax.value_and_grad(
+        lambda p, b: M.lm_loss(p, cfg, b, SINGLE_DEVICE_RULES, opts),
+        has_aux=True))(params, batch)
+    params, opt, om = adamw_update(grads, opt, params, 1e-3)
+    print(f"step done; grad_norm={float(om['grad_norm']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""End-to-end training driver example (deliverable b): trains a reduced
+model for a few hundred steps with WSD schedule, striped async checkpoints,
+and deterministic data — loss must visibly decrease.
+
+  PYTHONPATH=src python examples/train_lm.py --arch minicpm-2b --steps 300
+"""
+import argparse
+import tempfile
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b",
+                    help="minicpm-2b uses the WSD schedule (its assigned "
+                         "signature feature)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="train_lm_")
+    losses = train(args.arch, steps=args.steps, batch=args.batch,
+                   seq=args.seq, reduced=True, ckpt_dir=ckpt,
+                   ckpt_every=50, log_every=20)
+    first = sum(losses[:10]) / 10
+    last = sum(losses[-10:]) / 10
+    print(f"\nloss: {first:.4f} -> {last:.4f} "
+          f"({'IMPROVED' if last < first else 'no improvement?'})")
+    print(f"checkpoints in {ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Perf hillclimb driver: run tagged variants of the three chosen cells and
+print before/after roofline terms (EXPERIMENTS.md §Perf iteration log).
+
+  PYTHONPATH=src python experiments/hillclimb.py <iter-name>
+"""
+import json
+import sys
+
+from repro.launch.dryrun import run_cell
+from repro.models.model import RunOptions
+
+OUT = "experiments/dryrun"
+
+
+def show(rec, base_file):
+    base = json.load(open(os.path.join(OUT, base_file)))
+    for label, r in (("base", base), ("new ", rec)):
+        rt = r["roofline"]
+        print(f"  {label}: compute={rt['compute_s']:.3f}s memory={rt['memory_s']:.3f}s "
+              f"collective={rt['collective_s']:.3f}s dominant={rt['dominant']} "
+              f"flops/dev={r['per_device']['hlo_flops']:.3e} "
+              f"args={r['memory']['argument_bytes'] / 2**30:.2f}GiB")
+
+
+ITERS = {}
+
+
+def register(name):
+    def deco(fn):
+        ITERS[name] = fn
+        return fn
+    return deco
+
+
+@register("minicpm-padheads")
+def _():
+    """Iter M1: pad 36->48 heads so attention TPs 16-way instead of
+    replicating. Hypothesis: per-device attention flops / score memory
+    ÷(16/1.33)=12; function unchanged (padded heads hard-masked)."""
+    r = run_cell("minicpm-2b", "train_4k", multi_pod=False,
+                 tag="padheads", pad_heads=48)
+    show(r, "minicpm-2b__train_4k__pod16x16.json")
+
+
+@register("minicpm-padheads-bf16w")
+def _():
+    """Iter M2: + bf16 weight cast at step entry. Hypothesis: FSDP gather
+    bytes halve; per-use converts collapse to one per param."""
+    r = run_cell("minicpm-2b", "train_4k", multi_pod=False,
+                 tag="padheads_bf16w", pad_heads=48,
+                 opts=RunOptions(bf16_weights=True))
+    show(r, "minicpm-2b__train_4k__pod16x16__padheads.json")
+
+
+@register("minicpm-decode-padheads")
+def _():
+    """Iter M3: decode_32k with padded heads. Hypothesis: KV cache args
+    96->~6GiB/dev (36 kv heads were replicated; 48 shard 16-way)."""
+    r = run_cell("minicpm-2b", "decode_32k", multi_pod=False,
+                 tag="padheads", pad_heads=48)
+    show(r, "minicpm-2b__decode_32k__pod16x16.json")
+
+
+@register("moe-capacity")
+def _():
+    """Iter Q1: capacity-based expert dispatch instead of ragged_dot's
+    dense-per-expert fallback. Hypothesis: MoE GEMM flops ÷(E/(k·cf)) =
+    60/(4·1.25)=12 on the MoE share; memory down similarly."""
+    r = run_cell("qwen2-moe-a2.7b", "train_4k", multi_pod=False,
+                 tag="capacity", opts=RunOptions(moe_impl="capacity"))
+    show(r, "qwen2-moe-a2.7b__train_4k__pod16x16.json")
+
+
+@register("moe-capacity-bf16w")
+def _():
+    """Iter Q2: + bf16 weights."""
+    r = run_cell("qwen2-moe-a2.7b", "train_4k", multi_pod=False,
+                 tag="capacity_bf16w",
+                 opts=RunOptions(moe_impl="capacity", bf16_weights=True))
+    show(r, "qwen2-moe-a2.7b__train_4k__pod16x16__capacity.json")
+
+
+@register("grok-capacity")
+def _():
+    """Iter G1: grok-1-314b with capacity dispatch (8e top-2 => ÷3.2)."""
+    r = run_cell("grok-1-314b", "train_4k", multi_pod=False,
+                 tag="capacity", opts=RunOptions(moe_impl="capacity"))
+    show(r, "grok-1-314b__train_4k__pod16x16.json")
+
+
+@register("gemma-decode-kvseq")
+def _():
+    """Iter S1: decode_32k KV cache seq dim sharded over the (otherwise
+    idle for 8-kv-head GQA) model axis. Hypothesis: args 96->~8GiB/dev,
+    memory term ÷~12 (attention reads dominate decode)."""
+    r = run_cell("gemma3-12b", "decode_32k", multi_pod=False,
+                 tag="kvseq", opts=RunOptions(decode_kv_seq_axis=True))
+    show(r, "gemma3-12b__decode_32k__pod16x16.json")
+
+
+@register("gemma-long-ring")
+def _():
+    """Iter S2: long_500k with ring buffers on the 40 sliding-window layers
+    (1024 slots instead of 524288). Hypothesis: cache bytes ÷~6 (only the
+    8 global layers keep full KV)."""
+    r = run_cell("gemma3-12b", "long_500k", multi_pod=False,
+                 tag="ring", opts=RunOptions(ring_local_cache=True))
+    show(r, "gemma3-12b__long_500k__pod16x16.json")
+
+
+@register("gemma-long-ring-kvseq")
+def _():
+    """Iter S3: ring buffers + seq-sharded global-layer KV combined."""
+    r = run_cell("gemma3-12b", "long_500k", multi_pod=False,
+                 tag="ring_kvseq",
+                 opts=RunOptions(ring_local_cache=True, decode_kv_seq_axis=True))
+    show(r, "gemma3-12b__long_500k__pod16x16__ring.json")
+
+
+@register("llama-bf16w")
+def _():
+    """Iter L1: llama3 train_4k with bf16 weight cast. Hypothesis: all-
+    gather (FSDP) bytes halve; convert traffic drops; memory term down."""
+    r = run_cell("llama3-8b", "train_4k", multi_pod=False, tag="bf16w",
+                 opts=RunOptions(bf16_weights=True))
+    show(r, "llama3-8b__train_4k__pod16x16.json")
+
+
+@register("llama-bf16w-remat-dots")
+def _():
+    """Iter L2: + dots-saveable remat policy. Hypothesis: backward no
+    longer recomputes matmuls => compute term ÷~1.3, memory term up a bit
+    (saved activations)."""
+    r = run_cell("llama3-8b", "train_4k", multi_pod=False,
+                 tag="bf16w_dots",
+                 opts=RunOptions(bf16_weights=True, remat_policy="dots"))
+    show(r, "llama3-8b__train_4k__pod16x16__bf16w.json")
+
+
+
+
+@register("llama-gradsync-multipod")
+def _():
+    """Iter L3 (paper-faithful rail-optimized sync, MULTI-POD): in-pod
+    reduction full-precision on ICI (via FSDP reduce-scatter), cross-pod
+    hop int8+error-feedback via partial shard_map over 'pod'. Hypothesis:
+    cross-pod bytes ÷4 => collective term down ~proportionally to the
+    pod-hop share of all-reduce traffic."""
+    r = run_cell("llama3-8b", "train_4k", multi_pod=True, tag="gradsync",
+                 opts=RunOptions(grad_sync="compressed"))
+    show(r, "llama3-8b__train_4k__pod2x16x16.json")
+
+
+
+
+@register("llama-pp-multipod")
+def _():
+    """Iter L4 (beyond-paper, fabric-aware): GPipe pipeline stages across
+    the thin 'pod' axis (16 layer groups per stage, 8 microbatches).
+    Hypothesis: layer-param gradients stop crossing pods entirely; cross-pod
+    traffic becomes microbatch activation ppermutes (8 x 32*4096*4096*2B
+    ~ 2.1 GiB/step total vs FSDP's per-shard grad hop) and per-stage layer
+    memory halves. Cost: pipeline bubble 1/(M+1) ~ 11% of compute."""
+    r = run_cell("llama3-8b", "train_4k", multi_pod=True, tag="pp",
+                 opts=RunOptions(pipeline=True, pp_microbatches=8))
+    show(r, "llama3-8b__train_4k__pod2x16x16.json")
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or list(ITERS)
+    for n in names:
+        print(f"=== {n} ===")
+        print(" ", ITERS[n].__doc__.strip().splitlines()[0])
+        ITERS[n]()

@@ -1,0 +1,101 @@
+"""Render experiments/dryrun/*.json into the EXPERIMENTS.md tables.
+
+  python experiments/make_tables.py [--mesh pod16x16] [--tag ""]
+"""
+import argparse
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+ARCH_ORDER = ["minicpm-2b", "llama3-8b", "qwen3-1.7b", "gemma3-12b",
+              "qwen2-moe-a2.7b", "grok-1-314b", "mamba2-130m",
+              "whisper-base", "jamba-v0.1-52b", "phi-3-vision-4.2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+# 6·N·D model flops per token-equivalent; N from the configs (active for MoE)
+PARAMS_B = {   # total, active (backbone, non-embedding, approx)
+    "minicpm-2b": (2.4, 2.4), "llama3-8b": (8.0, 8.0),
+    "qwen3-1.7b": (1.7, 1.7), "gemma3-12b": (11.8, 11.8),
+    "qwen2-moe-a2.7b": (14.3, 2.7), "grok-1-314b": (314.0, 86.0),
+    "mamba2-130m": (0.13, 0.13), "whisper-base": (0.073, 0.073),
+    "jamba-v0.1-52b": (51.6, 12.0), "phi-3-vision-4.2b": (4.2, 4.2),
+}
+SHAPE_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+                "decode_32k": 128, "long_500k": 1}
+
+
+def load(mesh: str, tag: str = ""):
+    d = os.path.join(HERE, "dryrun")
+    out = {}
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            name = f"{a}__{s}__{mesh}" + (f"__{tag}" if tag else "")
+            p = os.path.join(d, name + ".json")
+            if os.path.exists(p):
+                out[(a, s)] = json.load(open(p))
+    return out
+
+
+def fmt_sec(x):
+    return f"{x * 1e3:.1f}ms" if x < 10 else f"{x:.1f}s"
+
+
+def roofline_table(mesh: str, tag: str = ""):
+    recs = load(mesh, tag)
+    print(f"\n### Roofline — {mesh}" + (f" ({tag})" if tag else "") + "\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL_FLOPS/HLO | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                continue
+            if not r.get("supported", True):
+                print(f"| {a} | {s} | — | — | — | — | — | SKIP (full attention) |")
+                continue
+            rt = r["roofline"]
+            n = r["n_chips"]
+            _, active = PARAMS_B[a]
+            mult = 6 if s == "train_4k" else 2
+            model_flops = mult * active * 1e9 * SHAPE_TOKENS[s]
+            ratio = model_flops / max(r["per_device"]["hlo_flops"] * n, 1)
+            print(f"| {a} | {s} | {fmt_sec(rt['compute_s'])} | "
+                  f"{fmt_sec(rt['memory_s'])} | {fmt_sec(rt['collective_s'])} | "
+                  f"**{rt['dominant']}** | {ratio:.2f} | "
+                  f"args {r['memory']['argument_bytes'] / 2**30:.1f}GiB/dev |")
+
+
+def dryrun_table(mesh: str):
+    recs = load(mesh)
+    print(f"\n### Dry-run — {mesh}\n")
+    print("| arch | shape | lower | compile | args/dev | temp/dev | "
+          "flops/dev | coll bytes/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                continue
+            if not r.get("supported", True):
+                print(f"| {a} | {s} | — | — | — | — | — | SKIP |")
+                continue
+            m = r["memory"]
+            print(f"| {a} | {s} | {r['lower_s']:.1f}s | {r['compile_s']:.1f}s | "
+                  f"{(m['argument_bytes'] or 0) / 2**30:.2f}GiB | "
+                  f"{(m['temp_bytes'] or 0) / 2**30:.2f}GiB | "
+                  f"{r['per_device']['hlo_flops']:.2e} | "
+                  f"{r['per_device']['collective_bytes']:.2e} |")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--table", default="roofline", choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    if args.table == "roofline":
+        roofline_table(args.mesh, args.tag)
+    else:
+        dryrun_table(args.mesh)

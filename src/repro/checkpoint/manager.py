@@ -1,0 +1,162 @@
+"""Striped, async, elastic checkpointing (the Lustre-store analogue).
+
+Layout (paper §2.3: DDN ES400NVX2 OST striping -> per-leaf byte stripes):
+
+    <root>/step_<N>.tmp/          # staged writes
+        ost0/<leaf>.stripe0
+        ost1/<leaf>.stripe1 ...
+    <root>/step_<N>/              # committed by atomic os.replace
+        ...
+        MANIFEST.json             # written + fsync'd LAST
+
+Commit protocol: write all stripes -> fsync -> write manifest -> fsync ->
+atomic directory rename.  A crash at any point leaves either the previous
+complete checkpoint or a .tmp that restore ignores — no torn states.
+
+Elastic restore: leaves are loaded to host, then ``jax.device_put`` with
+the *current* mesh's shardings — so a job can restart on a different device
+count / mesh shape than it saved from (node-failure recovery, DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+MANIFEST = "MANIFEST.json"
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, stripes: int = 4, keep: int = 3):
+        self.root = root
+        self.stripes = stripes
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=stripes)
+        self._pending: Optional[Any] = None
+        self._lock = threading.Lock()
+
+    # -- save ---------------------------------------------------------------
+
+    def _write_leaf(self, stage: str, name: str, arr: np.ndarray) -> Dict:
+        data = arr.tobytes()
+        n = max(1, min(self.stripes, len(data) or 1))
+        chunk = (len(data) + n - 1) // n if data else 0
+        files = []
+        for i in range(n):
+            ost = os.path.join(stage, f"ost{i}")
+            os.makedirs(ost, exist_ok=True)
+            fname = os.path.join(ost, f"{name.replace('/', '.')}.stripe{i}")
+            with open(fname, "wb") as f:
+                f.write(data[i * chunk:(i + 1) * chunk])
+                f.flush()
+                os.fsync(f.fileno())
+            files.append(os.path.relpath(fname, stage))
+        return {"name": name, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "files": files}
+
+    def save(self, step: int, tree, *, extra: Optional[Dict] = None) -> str:
+        """Blocking save. Returns the committed directory."""
+        stage = os.path.join(self.root, f"step_{step}.tmp")
+        final = os.path.join(self.root, f"step_{step}")
+        shutil.rmtree(stage, ignore_errors=True)
+        os.makedirs(stage)
+        leaves = _flatten_with_paths(tree)
+        host_leaves = [(n, np.asarray(jax.device_get(l))) for n, l in leaves]
+        records = list(self._pool.map(
+            lambda nl: self._write_leaf(stage, nl[0], nl[1]), host_leaves))
+        manifest = {"step": step, "leaves": records, "extra": extra or {}}
+        mpath = os.path.join(stage, MANIFEST)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(stage, final)                     # atomic commit
+        self._gc()
+        return final
+
+    def save_async(self, step: int, tree, *, extra: Optional[Dict] = None):
+        """Non-blocking save (device->host copy happens before returning so
+        training can mutate params immediately)."""
+        leaves = _flatten_with_paths(tree)
+        host = [(n, np.asarray(jax.device_get(l))) for n, l in leaves]
+        treedef = jax.tree.structure(tree)
+
+        def run():
+            rebuilt = jax.tree.unflatten(treedef, [a for _, a in host])
+            return self.save(step, rebuilt, extra=extra)
+
+        with self._lock:
+            self.wait()
+            self._pending = ThreadPoolExecutor(max_workers=1).submit(run)
+        return self._pending
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    # -- restore ------------------------------------------------------------
+
+    def steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.root, d, MANIFEST)):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, treedef_like, step: Optional[int] = None,
+                shardings=None) -> Tuple[int, Any]:
+        """Restore into the structure of `treedef_like`. If `shardings` (a
+        matching pytree of NamedSharding) is given, leaves are placed onto
+        the current mesh — independently of the mesh that saved them."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        cdir = os.path.join(self.root, f"step_{step}")
+        with open(os.path.join(cdir, MANIFEST)) as f:
+            manifest = json.load(f)
+        by_name = {r["name"]: r for r in manifest["leaves"]}
+        names = [n for n, _ in _flatten_with_paths(treedef_like)]
+        treedef = jax.tree.structure(treedef_like)
+
+        def load(name) -> np.ndarray:
+            rec = by_name[name]
+            data = b"".join(
+                open(os.path.join(cdir, f), "rb").read() for f in rec["files"])
+            return np.frombuffer(data, dtype=rec["dtype"]).reshape(rec["shape"])
+
+        arrays = list(self._pool.map(load, names))
+        tree = jax.tree.unflatten(treedef, arrays)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        return step, tree
+
+    # -- gc -----------------------------------------------------------------
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s}"),
+                          ignore_errors=True)

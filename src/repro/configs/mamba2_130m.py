@@ -1,0 +1,14 @@
+"""mamba2-130m [ssm] — SSD (state-space duality), attention-free.
+
+long_500k decode RUNS: the recurrent state is O(1) per token.
+[arXiv:2405.21060; unverified]
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm",
+    num_layers=24, d_model=768, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50_280, head_dim=64,
+    ssm=SSMConfig(d_state=128, conv_width=4, expand=2, head_dim=64, n_groups=1),
+    tie_embeddings=True, subquadratic=True,
+)

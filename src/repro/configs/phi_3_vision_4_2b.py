@@ -1,0 +1,12 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP frontend STUB
+(input_specs provides precomputed patch embeddings).
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b", family="vlm",
+    num_layers=32, d_model=3072, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32_064, head_dim=96,
+    frontend="vision", frontend_len=256, frontend_dim=1024,
+)

@@ -1,0 +1,12 @@
+"""whisper-base [audio] — enc-dec transformer backbone; conv frontend is a
+STUB (input_specs provides precomputed frame embeddings). [arXiv:2212.04356]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="audio",
+    num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+    d_ff=2048, vocab_size=51_865, head_dim=64,
+    encoder_decoder=True, num_encoder_layers=6, encoder_len=1500,
+    frontend="audio", frontend_len=1500, frontend_dim=80,
+)

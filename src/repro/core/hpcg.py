@@ -1,0 +1,112 @@
+"""HPCG: conjugate gradient on a 27-point 3-D stencil (paper Table 8).
+
+HPCG complements HPL by stressing memory bandwidth and neighbor/global
+communication instead of GEMM throughput.  We reproduce the benchmark's
+structure: a 3-D Laplacian-like 27-point operator (matrix-free — TPU
+adaptation: the stencil is applied as shifted adds, the idiomatic
+memory-bound form for a vector unit, instead of HPCG's CSR SpMV), preconditioned
+CG with a symmetric Gauss-Seidel-like (Jacobi on TPU — no sequential sweeps)
+smoother, convergence tracking, and the same "fraction of peak" observation
+the paper makes (§5: HPCG ≈ 0.8% of HPL on SAKURAONE).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def stencil_apply(x):
+    """27-point stencil: y = 26·x − Σ_{neighbors} x  (zero Dirichlet halo).
+
+    x: (nx, ny, nz). Matrix-free; one pass reads/writes ≈ 27 shifted arrays —
+    arithmetic intensity ~0.5 flop/byte => firmly memory-bound, as HPCG
+    intends.
+    """
+    y = 26.0 * x
+    for dx in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dz in (-1, 0, 1):
+                if dx == dy == dz == 0:
+                    continue
+                shifted = x
+                for ax, d in ((0, dx), (1, dy), (2, dz)):
+                    if d:
+                        pad = [(0, 0)] * 3
+                        pad[ax] = (max(d, 0), max(-d, 0))
+                        sl = [slice(None)] * 3
+                        sl[ax] = slice(max(-d, 0), shifted.shape[ax] + min(-d, 0) or None)
+                        shifted = jnp.pad(shifted[tuple(sl)], pad)
+                y = y - shifted
+    return y
+
+
+def jacobi_precondition(r, *, iters: int = 1):
+    """Jacobi smoother (diag = 26). HPCG uses symmetric Gauss-Seidel; GS's
+    sequential sweeps have no efficient TPU form (DESIGN.md §2 hardware
+    adaptation) so we use the Jacobi equivalent and validate convergence."""
+    z = r / 26.0
+    for _ in range(iters - 1):
+        z = z + (r - stencil_apply(z)) / 26.0
+    return z
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def hpcg_cg(b, *, max_iters: int = 50) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Preconditioned CG. Returns (x, per-iter residual norms)."""
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    z0 = jacobi_precondition(r0)
+    p0 = z0
+
+    def body(carry, _):
+        x, r, z, p = carry
+        ap = stencil_apply(p)
+        rz = jnp.vdot(r, z)
+        alpha = rz / jnp.vdot(p, ap)
+        x = x + alpha * p
+        r_new = r - alpha * ap
+        z_new = jacobi_precondition(r_new)
+        beta = jnp.vdot(r_new, z_new) / rz
+        p = z_new + beta * p
+        return (x, r_new, z_new, p), jnp.linalg.norm(r_new.reshape(-1))
+
+    (x, r, _, _), hist = jax.lax.scan(
+        body, (x0, r0, z0, p0), None, length=max_iters)
+    return x, hist
+
+
+def hpcg_flops_per_iter(nnodes: int) -> float:
+    """~27·2 flops per node for SpMV + 2 preconditioner + ~10 vector-op."""
+    return nnodes * (27 * 2 + 27 * 2 + 10)
+
+
+def hpcg_bytes_per_iter(nnodes: int, dtype_bytes: int = 4) -> float:
+    """Dominant traffic: stencil reads + vector ops (~12 array passes)."""
+    return nnodes * dtype_bytes * 12.0
+
+
+def run_hpcg(nx: int = 64, ny: int = 64, nz: int = 64,
+             max_iters: int = 50) -> dict:
+    key = jax.random.PRNGKey(7)
+    b = jax.random.uniform(key, (nx, ny, nz), jnp.float32, 0.0, 1.0)
+    x, hist = hpcg_cg(b, max_iters=max_iters)
+    x.block_until_ready()
+    t0 = time.perf_counter()
+    x, hist = hpcg_cg(b, max_iters=max_iters)
+    x.block_until_ready()
+    dt = time.perf_counter() - t0
+    nnodes = nx * ny * nz
+    r_final = float(hist[-1])
+    r0 = float(jnp.linalg.norm(b.reshape(-1)))
+    return {
+        "dims": (nx, ny, nz), "equations": nnodes, "iters": max_iters,
+        "time_s": dt,
+        "gflops": hpcg_flops_per_iter(nnodes) * max_iters / dt / 1e9,
+        "bandwidth_gbs": hpcg_bytes_per_iter(nnodes) * max_iters / dt / 1e9,
+        "rel_residual": r_final / r0,
+        "converged": r_final / r0 < 1e-4,
+    }

@@ -1,0 +1,68 @@
+"""FP8 mixed-precision compute path (HPL-MxP adaptation, paper Table 9).
+
+SAKURAONE's headline AI result is 339.86 PFLOP/s in "sloppy FP8" — low
+precision GEMMs wrapped in iterative refinement so the *answer* is still
+high precision.  This module provides the same structure for TPU:
+
+  - ``quantize_fp8`` / ``fp8_matmul``: e4m3 storage with per-tensor (or
+    per-tile, via the Pallas kernel) scaling, fp32 accumulation.
+  - ``Fp8Linear`` training path: activations/weights quantized on the fly
+    — the beyond-paper training-speed lever recorded in §Perf.
+  - ``iterative_refinement``: generic Richardson iteration turning a
+    low-precision solver into a high-precision one (used by core.hplmxp).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F8 = jnp.float8_e4m3fn
+F8_MAX = 448.0
+
+
+def quantize_fp8(x, *, axis=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scale x into e4m3 range. Returns (x_fp8, scale) with x ≈ x_fp8·scale."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-12) / F8_MAX
+    q = (x / scale).astype(F8)
+    return q, scale.astype(jnp.float32)
+
+
+def fp8_matmul(a, b, *, preferred=jnp.float32):
+    """a @ b with e4m3 inputs and fp32 accumulation (jnp reference path;
+    the Pallas kernel in repro.kernels.fp8_matmul is the TPU hot path)."""
+    qa, sa = quantize_fp8(a)
+    qb, sb = quantize_fp8(b)
+    out = jax.lax.dot_general(
+        qa, qb, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=preferred)
+    return out * (sa * sb)
+
+
+def fp8_einsum_2d(x, w):
+    """(..., K) @ (K, N) through the fp8 path, reshaping to 2-D."""
+    lead = x.shape[:-1]
+    out = fp8_matmul(x.reshape(-1, x.shape[-1]), w)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def iterative_refinement(apply_a: Callable, solve_lowprec: Callable, b,
+                         *, iters: int = 5):
+    """Solve A x = b given a low-precision solver (Richardson iteration).
+
+    x_{k+1} = x_k + solve_lowprec(b - A x_k).  With an FP8/bf16 LU as the
+    inner solver this recovers fp32-accurate solutions — the HPL-MxP method
+    (Haidar et al. 2019) the paper benchmarks.
+    Returns (x, residual_history).
+    """
+    x = solve_lowprec(b).astype(jnp.float32)
+
+    def body(x, _):
+        r = b.astype(jnp.float32) - apply_a(x)
+        dx = solve_lowprec(r).astype(jnp.float32)
+        return x + dx, jnp.linalg.norm(r) / jnp.maximum(jnp.linalg.norm(b), 1e-30)
+
+    x, hist = jax.lax.scan(body, x, None, length=iters)
+    return x, hist

@@ -1,0 +1,80 @@
+"""Deterministic synthetic token pipeline (shard-aware, restart-safe).
+
+Production data loading for LLM training has two properties this module
+reproduces without external datasets: (1) determinism keyed by (step,
+position) so a restarted/rescaled job resumes the exact stream (elastic
+restore replays from the checkpointed step), and (2) per-shard generation —
+each host materializes only its addressable slice via
+``jax.make_array_from_callback`` so no host ever holds the global batch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _tokens_for_slice(step: int, lo: int, hi: int, seq: int, vocab: int,
+                      salt: int = 0, noise: float = 0.15) -> np.ndarray:
+    """Deterministic tokens for global batch rows [lo, hi).
+
+    The stream is a noisy affine-recurrence Markov chain
+    (``next = (a·prev + c) mod V``, flipped to uniform noise w.p. `noise`)
+    — deterministic AND learnable, so end-to-end training demos show real
+    loss movement instead of fitting unigram statistics of pure noise.
+    """
+    rows = []
+    a, c = 31, 17
+    for r in range(lo, hi):
+        rng = np.random.Generator(
+            np.random.Philox(key=[(step << 32) | (salt & 0xFFFFFFFF), r]))
+        toks = np.empty(seq + 1, dtype=np.int64)
+        toks[0] = rng.integers(0, vocab)
+        flips = rng.random(seq) < noise
+        rand = rng.integers(0, vocab, size=seq)
+        for t in range(seq):
+            toks[t + 1] = rand[t] if flips[t] else (a * toks[t] + c) % vocab
+        rows.append(toks)
+    arr = np.stack(rows)
+    return arr
+
+
+class TokenPipeline:
+    """get_batch(step) -> {'tokens','labels'} global jax.Arrays."""
+
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 mesh: Optional[Mesh] = None, batch_spec: P = P()):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.batch = global_batch
+        self.mesh = mesh
+        self.spec = batch_spec
+
+    def _global(self, step: int) -> np.ndarray:
+        return _tokens_for_slice(step, 0, self.batch, self.seq, self.vocab)
+
+    def get_batch(self, step: int) -> Dict[str, jax.Array]:
+        if self.mesh is None:
+            arr = self._global(step)
+            return {"tokens": jnp.asarray(arr[:, :-1], jnp.int32),
+                    "labels": jnp.asarray(arr[:, 1:], jnp.int32)}
+        sharding = NamedSharding(self.mesh, self.spec)
+
+        def cb_tokens(index):
+            lo, hi = index[0].start or 0, index[0].stop or self.batch
+            sl = _tokens_for_slice(step, lo, hi, self.seq, self.vocab)
+            return sl[:, :-1][:, index[1]].astype(np.int32)
+
+        def cb_labels(index):
+            lo, hi = index[0].start or 0, index[0].stop or self.batch
+            sl = _tokens_for_slice(step, lo, hi, self.seq, self.vocab)
+            return sl[:, 1:][:, index[1]].astype(np.int32)
+
+        shape = (self.batch, self.seq)
+        return {
+            "tokens": jax.make_array_from_callback(shape, sharding, cb_tokens),
+            "labels": jax.make_array_from_callback(shape, sharding, cb_labels),
+        }

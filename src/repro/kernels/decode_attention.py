@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: single-query (decode) flash attention.
+
+The serving hot spot: one new query token attends against a long KV cache
+(decode_32k: 32768 keys; long_500k: 524288).  Memory-bound by the KV read —
+so the kernel streams K/V tiles HBM->VMEM exactly once, carries online-
+softmax statistics in scratch, and masks by each row's current length
+``pos`` (slots beyond the write position are dead).
+
+Layout: q (BH, d); k/v (BH, T, d); lengths (BH,) int32 (number of valid
+keys = pos+1).  GQA expansion happens in the ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, bk: int, k_steps: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0]
+    # skip tiles entirely beyond the valid length
+    @pl.when(ki * bk < length)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)                  # (1, d)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)            # (1, bk)
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_old - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                    # (bk, d)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == k_steps - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention_pallas(q, k, v, lengths, *, bk: int = 256,
+                            interpret: bool = False):
+    """q: (BH, d); k/v: (BH, T, d); lengths: (BH,) valid-key counts.
+    Returns (BH, d) in q.dtype."""
+    bh, d = q.shape
+    _, t, _ = k.shape
+    assert t % bk == 0, (t, bk)
+    k_steps = t // bk
+    scale = d ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, bk=bk, k_steps=k_steps),
+        grid=(bh, k_steps),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, s: (b,)),
+            pl.BlockSpec((1, d), lambda b, s: (b, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, s: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, s: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fp8_matmul_ref(a_q, b_q, a_scale, b_scale, *, bm: int = 128, bn: int = 128):
+    """Dequantize-then-matmul oracle. Same per-block scale layout as the
+    kernel: a_scale[i] applies to rows [i*bm, (i+1)*bm)."""
+    m, _ = a_q.shape
+    _, n = b_q.shape
+    sa = jnp.repeat(a_scale, bm)[:, None]
+    sb = jnp.repeat(b_scale, bn)[None, :]
+    out = jax.lax.dot_general(
+        a_q.astype(jnp.float32), b_q.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    return out * (sa * sb)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """Dense-softmax oracle. q: (BH, Sq, d); k/v: (BH, Skv, d)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    qp = jnp.arange(q.shape[1])[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    keep = jnp.ones_like(s[0], bool)
+    if causal:
+        keep &= kp <= qp
+    if window is not None:
+        keep &= kp > qp - window
+    s = jnp.where(keep[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """Oracle for single-query decode. q: (BH, d); k/v: (BH, T, d)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bd,btd->bt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    t = jnp.arange(k.shape[1])[None, :]
+    s = jnp.where(t < lengths[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bt,btd->bd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,302 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import — jax locks the device
+count on first init, and the dry-run needs 512 placeholder host devices to
+build the production meshes.  (Do NOT import this module from tests or
+benchmarks: they must see 1 device.)
+
+For each cell this records, into experiments/dryrun/<cell>.json:
+  - memory_analysis (per-device argument/output/temp/code bytes),
+  - cost_analysis (per-device HLO flops / bytes accessed),
+  - collective operand bytes parsed from the compiled HLO, by op kind,
+  - lowering/compile wall times,
+and prints the roofline terms (repro.core.topology.roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, cell_supported, get_config, get_shape
+from repro.core import topology
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, lower_cell
+from repro.models.model import RunOptions
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+_ARRAY_RE = re.compile(r"\b([a-z]\w*?)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(\([^=]*?\)|\S+)\s+(all-reduce-start|all-gather-start|"
+    r"all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute-start|"
+    r"collective-permute)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _arr_bytes(dtype: str, dims: str) -> int:
+    size = _DTYPE_BYTES.get(dtype)
+    if size is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * size
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))            # replica_groups=[G,S]<=[N]
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:                                  # replica_groups={{0,1},...}
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device *operand* bytes of every collective, by op kind.
+
+    Optimized HLO prints operand references without inline types, so operand
+    sizes are derived from the (typed) result + op semantics:
+      all-reduce / all-to-all / collective-permute: operand == result
+      all-gather: operand = result / group_size
+      reduce-scatter: operand = result × group_size
+    """
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_type, kind = m.group(1), m.group(2).replace("-start", "")
+        rbytes = sum(_arr_bytes(d, s) for d, s in _ARRAY_RE.findall(result_type))
+        g = _group_size(line)
+        if kind == "all-gather":
+            ob = rbytes // max(g, 1)
+        elif kind == "reduce-scatter":
+            ob = rbytes * g
+        else:
+            ob = rbytes
+        out[kind] += ob
+        counts[kind] += 1
+    return {"bytes_by_op": {k: v for k, v in out.items() if counts[k]},
+            "counts": {k: v for k, v in counts.items() if v},
+            "total": sum(out.values())}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             opts: RunOptions = None, out_dir: str = "experiments/dryrun",
+             tag: str = "", base_rules=None, verbose: bool = True,
+             pad_heads=None) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = cell_supported(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "tag": tag, "supported": ok}
+    if not ok:
+        record["skip_reason"] = reason
+        _write(out_dir, cell_id, record)
+        if verbose:
+            print(f"[dryrun] {cell_id}: SKIP ({reason})")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.perf_counter()
+    cell = build_cell(cfg, shape, mesh, opts=opts, base_rules=base_rules,
+                      pad_heads=pad_heads)
+    with mesh:
+        lowered = lower_cell(cell)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)          # flat (loop bodies counted once)
+    loop_aware = hlo_analysis.analyze(hlo)  # trip-count-corrected
+
+    flops_dev = float(loop_aware["flops"])
+    bytes_dev = float(loop_aware["bytes_accessed"])
+    coll_dev = float(loop_aware["collective_total"])
+    rt = topology.roofline(flops_dev * n_chips, bytes_dev * n_chips,
+                           coll_dev * n_chips, n_chips)
+    record.update({
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "per_device": {"hlo_flops": flops_dev, "hlo_bytes": bytes_dev,
+                       "collective_bytes": coll_dev},
+        "cost_analysis_raw": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes": float(cost.get("bytes accessed", 0.0))},
+        "collectives": {
+            "loop_aware_bytes_by_op": loop_aware["collective_bytes"],
+            "loop_aware_counts": loop_aware["collective_counts"],
+            "flat_bytes_by_op": coll["bytes_by_op"],
+        },
+        "bytes_by_op": loop_aware["bytes_by_op"],
+        "roofline": {"compute_s": rt.compute_s, "memory_s": rt.memory_s,
+                     "collective_s": rt.collective_s, "dominant": rt.dominant,
+                     "step_s": rt.step_s},
+    })
+    _write(out_dir, cell_id, record)
+    if verbose:
+        mb = (record["memory"]["argument_bytes"] or 0) / (1 << 30)
+        print(f"[dryrun] {cell_id}: OK lower={t_lower:.1f}s "
+              f"compile={t_compile:.1f}s args={mb:.2f}GiB/dev "
+              f"flops/dev={flops_dev:.3e} coll/dev={coll_dev:.3e}B "
+              f"dominant={rt.dominant} step={rt.step_s * 1e3:.2f}ms")
+    return record
+
+
+def _write(out_dir: str, cell_id: str, record: dict):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{cell_id}.json"), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def run_hpl_cell(*, n: int = 131_072, nb: int = 1024, matmul: str = "fp32",
+                 multi_pod: bool = False, out_dir: str = "experiments/dryrun",
+                 verbose: bool = True) -> dict:
+    """Dry-run the paper's own benchmark: distributed HPL (blocked LU with
+    the matrix 2-D sharded over the production mesh).  N is chosen so the
+    local tile (N/16 × N/16 fp32 = 256 MiB at N=131072) fits v5e HBM with
+    room for the trailing-update temporaries."""
+    from repro.core.hpl import distributed_hpl_setup
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"hpl-{matmul}-n{n}__{mesh_name}"
+    t0 = time.perf_counter()
+    fn, abstract, _ = distributed_hpl_setup(mesh, n, nb=nb, matmul=matmul)
+    with mesh:
+        lowered = fn.lower(abstract)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+    loop_aware = hlo_analysis.analyze(compiled.as_text())
+    n_chips = mesh.size
+    rt = topology.roofline(loop_aware["flops"] * n_chips,
+                           loop_aware["bytes_accessed"] * n_chips,
+                           loop_aware["collective_total"] * n_chips, n_chips)
+    from repro.core.hpl import hpl_flops
+    record = {
+        "arch": f"hpl-{matmul}", "shape": f"n{n}_nb{nb}", "mesh": mesh_name,
+        "supported": True, "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {"argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                   "temp_bytes": getattr(mem, "temp_size_in_bytes", None)},
+        "per_device": {"hlo_flops": loop_aware["flops"],
+                       "hlo_bytes": loop_aware["bytes_accessed"],
+                       "collective_bytes": loop_aware["collective_total"]},
+        "collectives": {"loop_aware_bytes_by_op": loop_aware["collective_bytes"]},
+        "hpl_flops_analytic": hpl_flops(n),
+        "roofline": {"compute_s": rt.compute_s, "memory_s": rt.memory_s,
+                     "collective_s": rt.collective_s, "dominant": rt.dominant,
+                     "step_s": rt.step_s},
+    }
+    _write(out_dir, cell_id, record)
+    if verbose:
+        print(f"[dryrun] {cell_id}: OK lower={t_lower:.1f}s "
+              f"compile={t_compile:.1f}s flops/dev={loop_aware['flops']:.3e} "
+              f"coll/dev={loop_aware['collective_total']:.3e}B "
+              f"dominant={rt.dominant} time~{rt.step_s:.1f}s "
+              f"(analytic 2/3·n³: {hpl_flops(n):.3e} total)")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="run with the post-hillclimb option set "
+                         "(EXPERIMENTS.md §Perf) instead of the "
+                         "paper-faithful baseline")
+    ap.add_argument("--hpl", action="store_true",
+                    help="dry-run the distributed HPL benchmark instead of "
+                         "the architecture cells")
+    ap.add_argument("--hpl-n", type=int, default=131_072)
+    ap.add_argument("--hpl-matmul", default="fp32",
+                    choices=["fp32", "bf16", "fp8"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    if args.hpl:
+        run_hpl_cell(n=args.hpl_n, matmul=args.hpl_matmul,
+                     multi_pod=args.multi_pod, out_dir=args.out)
+        raise SystemExit(0)
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = []
+    for a, s, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        tag = "opt" if args.optimized else ""
+        fname = f"{a}__{s}__{mesh_name}" + (f"__{tag}" if tag else "")
+        path = os.path.join(args.out, fname + ".json")
+        if args.skip_existing and os.path.exists(path):
+            existing = json.load(open(path))
+            if existing.get("supported") is False or "roofline" in existing:
+                print(f"[dryrun] {fname}: cached")
+                continue
+        opts = None
+        pad_heads = None
+        if args.optimized:
+            opts = RunOptions(ring_local_cache=True, decode_kv_seq_axis=True,
+                              moe_impl="capacity")
+            if a == "minicpm-2b":
+                pad_heads = 48
+        try:
+            run_cell(a, s, multi_pod=mp, out_dir=args.out, tag=tag,
+                     opts=opts, pad_heads=pad_heads)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures.append((a, s, mp, repr(e)))
+            print(f"[dryrun] {fname}: FAIL {e}")
+            traceback.print_exc()
+    print(f"\n[dryrun] done; {len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", f)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

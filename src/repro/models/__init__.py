@@ -1,0 +1,4 @@
+from repro.models.model import (  # noqa: F401
+    param_specs, init_params, abstract_params, axes_tree,
+    lm_loss, prefill, decode_step, init_cache, cache_specs,
+)

@@ -1,0 +1,180 @@
+"""Attention: GQA with RoPE, optional qk-norm / sliding window, KV cache.
+
+Prefill/train uses a query-chunked implementation (bounded score memory —
+32k×32k scores are never materialized); decode attends a single query token
+against the cache.  A Pallas flash-attention kernel (repro.kernels.flash
+_attention) can be swapped in via ``impl='pallas'`` for TPU runs; the
+chunked jnp path is the portable oracle and the dry-run default.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import ParamSpec, rms_norm, rope
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg, *, cross: bool = False) -> dict:
+    d, h, kvh, hd = (cfg.d_model, cfg.padded_heads, cfg.padded_kv_heads,
+                     cfg.resolved_head_dim)
+    specs = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kvh, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kvh, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        specs["q_norm"] = ParamSpec((hd,), ("head_dim",), "zeros")
+        specs["k_norm"] = ParamSpec((hd,), ("head_dim",), "zeros")
+    return specs
+
+
+def _head_mask(cfg, out):
+    """Zero the padded heads (cfg.pad_heads_to): keeps the padded model
+    EXACTLY equal to the assigned config while enabling 16-way TP."""
+    if cfg.pad_heads_to is None:
+        return out
+    hp = cfg.padded_heads
+    mask = (jnp.arange(hp) < cfg.num_heads).astype(out.dtype)
+    return out * mask[None, None, :, None]
+
+
+def _project_qkv(p, cfg, xq, xkv, positions_q, positions_kv, *, use_rope=True):
+    dt = xq.dtype
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dnk->btnk", xkv, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dnk->btnk", xkv, p["wv"].astype(dt))
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions_q, cfg.rope_theta)
+        k = rope(k, positions_kv, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_attend(q, k, v, mask_fn, sq_positions, kv_positions, scale):
+    """q: (B,Sq,H,hd); k,v: (B,T,KVH,hd). mask_fn(qpos, kpos)->bool keep."""
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, hd)
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k) * scale   # (B,KVH,G,Sq,T)
+    keep = mask_fn(sq_positions[:, :, None], kv_positions[:, None, :])  # (B,Sq,T)
+    scores = jnp.where(keep[:, None, None], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention(p, cfg, x, *, kind: str = "attn", causal: bool = True,
+              positions=None, x_kv=None, kv_positions=None,
+              q_chunk: int = 1024, use_rope: bool = True):
+    """Full-sequence (train / prefill) attention.
+
+    kind: 'attn' (global) or 'attn_local' (sliding window cfg.sliding_window).
+    x_kv: source for K/V in cross-attention (positions via kv_positions).
+    Returns (out, (k, v)) — k/v returned so prefill can seed the cache.
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    cross = x_kv is not None
+    xkv = x_kv if cross else x
+    if kv_positions is None:
+        kv_positions = (jnp.broadcast_to(jnp.arange(xkv.shape[1], dtype=jnp.int32),
+                                         (B, xkv.shape[1])) if cross else positions)
+    q, k, v = _project_qkv(p, cfg, x, xkv, positions, kv_positions,
+                           use_rope=use_rope and not cross)
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    window = cfg.sliding_window if kind == "attn_local" else None
+
+    def mask_fn(qp, kp):
+        keep = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+        if causal and not cross:
+            keep &= kp <= qp
+        if window is not None:
+            keep &= kp > qp - window
+        return keep
+
+    n_chunks = S // q_chunk if (S % q_chunk == 0 and S > q_chunk) else 1
+    if n_chunks <= 1:
+        out = _gqa_attend(q, k, v, mask_fn, positions, kv_positions, scale)
+    else:
+        qs = q.reshape(B, n_chunks, q_chunk, *q.shape[2:]).swapaxes(0, 1)
+        ps = positions.reshape(B, n_chunks, q_chunk).swapaxes(0, 1)
+
+        def body(_, qc):
+            qi, pi = qc
+            return None, _gqa_attend(qi, k, v, mask_fn, pi, kv_positions, scale)
+
+        _, outs = jax.lax.scan(body, None, (qs, ps))
+        out = outs.swapaxes(0, 1).reshape(B, S, *outs.shape[3:])
+    proj = jnp.einsum("bshd,hdD->bsD", _head_mask(cfg, out),
+                      p["wo"].astype(x.dtype))
+    return proj, (k, v)
+
+
+def decode_attention(p, cfg, x, cache_k, cache_v, pos, *, kind: str = "attn",
+                     cross: bool = False, use_rope: bool = True):
+    """Single-token decode. x: (B,1,D); cache_k/v: (B,T,KVH,hd); pos: (B,) int32.
+
+    Returns (out, new_k, new_v).  For cross-attention the cache holds the
+    (fixed) encoder K/V and is not updated.
+    """
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    if cross:
+        k, v = cache_k, cache_v
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        keep = jnp.ones((B, 1, T), bool)
+    else:
+        q, k_new, v_new = _project_qkv(
+            p, cfg, x, x, pos[:, None], pos[:, None], use_rope=use_rope)
+        # write the new K/V at position pos (per-batch dynamic index)
+        upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0))
+        k = upd(cache_k, k_new, pos)
+        v = upd(cache_v, v_new, pos)
+        kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        keep = kv_pos[:, None, :] <= pos[:, None, None]
+        if kind == "attn_local" and cfg.sliding_window is not None:
+            keep &= kv_pos[:, None, :] > (pos[:, None, None] - cfg.sliding_window)
+    hd = cfg.resolved_head_dim
+    out = _gqa_attend(q, k, v, lambda qp, kp: keep,
+                      pos[:, None], kv_pos, hd ** -0.5)
+    proj = jnp.einsum("bshd,hdD->bsD", _head_mask(cfg, out),
+                      p["wo"].astype(x.dtype))
+    if cross:
+        return proj, cache_k, cache_v
+    return proj, k, v
+
+
+def ring_decode_attention(p, cfg, x, cache_k, cache_v, pos):
+    """Sliding-window decode against a ring buffer of size W = sliding_window.
+
+    The cache keeps only the last W tokens (slot = position mod W), cutting
+    local-layer KV memory for long-context decode from O(S) to O(W) — the
+    memory-term optimization recorded in EXPERIMENTS.md §Perf.
+    """
+    W = cache_k.shape[1]
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, cfg, x, x, pos[:, None], pos[:, None])
+    slot = pos % W
+    upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0))
+    k = upd(cache_k, k_new, slot)
+    v = upd(cache_v, v_new, slot)
+    # Absolute position stored in each slot j: pos - ((pos - j) mod W)
+    j = jnp.arange(W, dtype=jnp.int32)[None, :]
+    kv_pos = pos[:, None] - jnp.mod(pos[:, None] - j, W)
+    keep = (kv_pos >= 0)[:, None, :]                        # unfilled slots masked
+    hd = cfg.resolved_head_dim
+    out = _gqa_attend(q, k, v, lambda qp, kp: keep, pos[:, None], kv_pos, hd ** -0.5)
+    proj = jnp.einsum("bshd,hdD->bsD", _head_mask(cfg, out),
+                      p["wo"].astype(x.dtype))
+    return proj, k, v

@@ -1,0 +1,184 @@
+"""Mamba-2 (SSD — state-space duality) block, pure JAX.
+
+Training / prefill uses the chunked SSD algorithm (arXiv:2405.21060):
+intra-chunk quadratic ("attention-like") term + inter-chunk recurrent state
+carried with an associative scan.  Decode is the O(1)-per-token recurrence
+on the (B, H, P, N) state, which is what makes the assigned ``long_500k``
+cell applicable to SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import ParamSpec, rms_norm
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, nheads, conv_dim
+
+
+def ssm_specs(cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + nheads
+    return {
+        "in_proj": ParamSpec((d, d_in_proj), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((s.conv_width, conv_dim), ("conv_width", "ssm_inner")),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "zeros"),
+        "A_log": ParamSpec((nheads,), ("ssm_heads",), "ones"),
+        "D": ParamSpec((nheads,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamSpec((nheads,), ("ssm_heads",), "zeros"),
+        "norm": ParamSpec((d_inner,), ("ssm_inner",), "zeros"),
+        "out_proj": ParamSpec((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_zxbcdt(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, nheads, _ = ssm_dims(cfg)
+    gs = s.n_groups * s.d_state
+    z, xc, B, C, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gs, 2 * d_inner + 2 * gs], axis=-1)
+    return z, xc, B, C, dt
+
+
+def _causal_conv(x, w, b, *, init_state=None):
+    """Depthwise causal conv, width W. x: (B,S,C); w: (W,C). Returns y, tail."""
+    W = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(W))
+    tail = xp[:, -(W - 1):, :] if W > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return y + b.astype(x.dtype), tail
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD. xh:(B,S,H,P) dt:(B,S,H) A:(H,) Bm/Cm:(B,S,G,N).
+
+    Returns y:(B,S,H,P).
+    """
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    def cshape(t):  # (B,S,...) -> (B,nc,chunk,...)
+        return t.reshape(B, nc, chunk, *t.shape[2:])
+
+    xh_, dt_, B_, C_ = map(cshape, (xh, dt, Bm, Cm))
+    dA = dt_ * A[None, None, None, :]                       # (B,nc,L,H) negative
+    dA_cs = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+
+    # Intra-chunk (quadratic in chunk length): mask s>=t, decay exp(dAcs_s - dAcs_t)
+    Bh = jnp.repeat(B_, rep, axis=3)                        # (B,nc,L,H,N) via group->head
+    Ch = jnp.repeat(C_, rep, axis=3)
+    scores = jnp.einsum("bclhn,bcthn->bchlt", Ch, Bh)       # (B,nc,H,L,T)
+    dh = dA_cs.transpose(0, 1, 3, 2)                        # (B,nc,H,L)
+    diff = dh[..., :, None] - dh[..., None, :]              # (B,nc,H,L,T)
+    li = jnp.arange(chunk)
+    causal = li[:, None] >= li[None, :]
+    # mask BEFORE exp: above-diagonal diffs are positive and would overflow
+    decay = jnp.exp(jnp.where(causal, diff, -jnp.inf))
+    M = scores * decay.astype(scores.dtype)
+    Mdt = M * dt_.transpose(0, 1, 3, 2)[..., None, :].astype(scores.dtype)
+    y_intra = jnp.einsum("bchlt,bcthp->bclhp", Mdt, xh_)
+
+    # Chunk summary states: h_c = sum_t exp(dAcs_L - dAcs_t) dt_t B_t x_t
+    seg = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)              # (B,nc,L,H)
+    h_chunk = jnp.einsum("bclh,bclhn,bclhp->bchnp",
+                         dt_ * seg, Bh, xh_)                # (B,nc,H,N,P)
+
+    # Inter-chunk recurrence via associative scan over chunks:
+    # H_c = exp(sum dA_c) H_{c-1} + h_c
+    total_decay = jnp.exp(jnp.sum(dA, axis=2))              # (B,nc,H)
+
+    def combine(a, b):
+        da, ha = a
+        db, hb = b
+        return da * db, ha * db[..., None, None] + hb
+
+    dec_acc, h_acc = jax.lax.associative_scan(combine, (total_decay, h_chunk), axis=1)
+    # state entering chunk c = H_{c-1}
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_acc[:, :1]), h_acc[:, :-1]], axis=1)  # (B,nc,H,N,P)
+
+    # Inter-chunk output: y_t += C_t · exp(dAcs_t) H_prev
+    in_decay = jnp.exp(dA_cs)                               # (B,nc,L,H)
+    y_inter = jnp.einsum("bclhn,bchnp->bclhp",
+                         Ch * in_decay[..., None].astype(Ch.dtype), h_prev.astype(Ch.dtype))
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    final_state = h_acc[:, -1]                              # (B,H,N,P)
+    return y, final_state
+
+
+def ssm_block(p, cfg, x, *, conv_state=None, ssm_state=None, decode: bool = False):
+    """Mamba-2 block. x: (B,S,D).
+
+    Train/prefill: decode=False, returns (y, (conv_tail, final_state)).
+    Decode: decode=True with S==1 and both states given; returns
+    (y, (new_conv_state, new_ssm_state)).
+    """
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    dt_c = x.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_c))
+    z, xBC_pre, Bm_pre, Cm_pre, dt_raw = _split_zxbcdt(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xBC_pre, Bm_pre, Cm_pre], axis=-1)  # (B,S,conv_dim)
+    conv_out, conv_tail = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                       init_state=conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+
+    Bq = Bm.reshape(*Bm.shape[:-1], s.n_groups, s.d_state)
+    Cq = Cm.reshape(*Cm.shape[:-1], s.n_groups, s.d_state)
+    xh = xc.reshape(*xc.shape[:-1], nheads, s.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if decode:
+        # Recurrent single step: states required.
+        dA = jnp.exp(dt[:, 0] * A[None, :])                 # (B,H)
+        rep = nheads // s.n_groups
+        Bh = jnp.repeat(Bq[:, 0], rep, axis=1)              # (B,H,N)
+        Ch = jnp.repeat(Cq[:, 0], rep, axis=1)
+        dBx = (dt[:, 0][..., None, None] * Bh[..., :, None]
+               * xh[:, 0][..., None, :].astype(jnp.float32))  # (B,H,N,P)
+        new_state = ssm_state * dA[..., None, None] + dBx
+        y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), new_state)
+        y = y[:, None].astype(dt_c).reshape(x.shape[0], 1, d_inner)
+        y = y + xc * p["D"].astype(dt_c).repeat(s.head_dim)[None, None, :]
+        states = (conv_tail, new_state)
+    else:
+        S = x.shape[1]
+        chunk = min(s.chunk_size, S) if S % s.chunk_size else s.chunk_size
+        pad = (-S) % chunk
+        if pad:
+            # zero-pad the tail: padded steps have dt=0 => identity on state
+            padfn = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+            xh_p, dt_p, Bq_p, Cq_p = map(padfn, (xh, dt, Bq, Cq))
+        else:
+            xh_p, dt_p, Bq_p, Cq_p = xh, dt, Bq, Cq
+        yh, final_state = _ssd_chunked(
+            xh_p.astype(jnp.float32), dt_p, A,
+            Bq_p.astype(jnp.float32), Cq_p.astype(jnp.float32), chunk)
+        if pad:
+            yh = yh[:, :S]
+        y = yh.astype(dt_c).reshape(*x.shape[:2], d_inner)
+        y = y + xc * p["D"].astype(dt_c).repeat(s.head_dim)[None, None, :]
+        states = (conv_tail, final_state)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_c))
+    return out, states

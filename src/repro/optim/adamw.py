@@ -1,0 +1,64 @@
+"""AdamW, dependency-free, with global-norm clipping.
+
+Optimizer state is a pytree parallel to params (same logical axes => same
+shardings — moments shard exactly like their parameters, so optimizer
+memory scales down with TP/DP like the model does)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    return {"mu": zeros(), "nu": zeros(),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, lr, cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        step = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (step + cfg.weight_decay * p32)
+        return new_p.astype(p.dtype), mu.astype(p.dtype), nu.astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"mu": new_mu, "nu": new_nu, "count": count}
+    return new_p, new_state, {"grad_norm": gnorm}

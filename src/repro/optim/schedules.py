@@ -1,0 +1,37 @@
+"""LR schedules. WSD (warmup-stable-decay) is minicpm-2b's assigned
+signature feature (arXiv:2404.06395): linear warmup, long flat stable
+phase, sharp (exponential-ish, here cosine) decay over the final ~10%."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps, peak):
+    return peak * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+
+
+def wsd_schedule(step, *, peak: float, warmup_steps: int, total_steps: int,
+                 decay_frac: float = 0.1, floor_frac: float = 0.01):
+    """Warmup-Stable-Decay."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = decay_frac * total_steps
+    decay_start = total_steps - decay_steps
+    warm = linear_warmup(step, warmup_steps, peak)
+    t = jnp.clip((step - decay_start) / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    decay = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm,
+                     jnp.where(step < decay_start, peak, decay))
+
+
+def cosine_schedule(step, *, peak: float, warmup_steps: int, total_steps: int,
+                    floor_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, warmup_steps, peak)
+    t = jnp.clip((step - warmup_steps) /
+                 jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def get_schedule(name: str, **kw):
+    return {"wsd": wsd_schedule, "cosine": cosine_schedule}[name], kw

@@ -1,0 +1,4 @@
+from repro.parallel.sharding import (  # noqa: F401
+    LogicalRules, DEFAULT_RULES, SINGLE_DEVICE_RULES,
+    spec_for, shardings_for_tree, batch_spec, activation_rules,
+)

@@ -1,0 +1,174 @@
+"""Logical-axis sharding rules (t5x-style, dependency-free).
+
+Every parameter / activation in the model is annotated with a tuple of
+*logical* axis names ("vocab", "embed", "heads", "ff", "expert", "batch",
+"seq", ...).  A ``LogicalRules`` table maps logical names to physical mesh
+axes of the production mesh ``(pod, data, model)``.  This keeps the model
+code mesh-agnostic: DP/TP/EP/SP are all expressed as rule tables, and the
+perf hillclimb swaps rule tables rather than editing the model.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class LogicalRules:
+    def __init__(self, rules: Mapping[str, MeshAxes]):
+        self.rules = dict(rules)
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+    def with_overrides(self, **overrides: MeshAxes) -> "LogicalRules":
+        new = dict(self.rules)
+        new.update(overrides)
+        return LogicalRules(new)
+
+
+# Production rules for the (pod, data, model) mesh.
+#  - "batch" shards over both DP axes (pod outermost = thin cross-pod hop,
+#    mirroring SAKURAONE's 2-pod rail-optimized layout).
+#  - tensor-parallel dims ("heads", "ff", "vocab", "expert_ff") on "model".
+#  - "embed" (the d_model dim of weights) shards over "data" => FSDP/ZeRO-3:
+#    parameters + optimizer moments scale down with DP size, which is what
+#    lets grok-1-314b fit 16 GB/chip; GSPMD inserts the per-layer gathers.
+#  - "seq_shard" is used for sequence parallelism on long-context cells.
+DEFAULT_RULES = LogicalRules({
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": "data",          # sequence parallelism (long_500k)
+    "embed": "data",              # FSDP dim
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "expert": None,               # experts replicated; expert_ff TP'd (MoE-TP)
+    "expert_ff": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv_width": None,
+})
+
+SINGLE_DEVICE_RULES = LogicalRules({k: None for k in DEFAULT_RULES.rules})
+
+
+def rules_for_mesh(mesh: Mesh, base: "LogicalRules" = None) -> "LogicalRules":
+    """Restrict a rule table to axes that exist on `mesh` (e.g. no 'pod' on
+    the single-pod production mesh)."""
+    base = base or DEFAULT_RULES
+    names = set(mesh.axis_names)
+    out = {}
+    for k, v in base.rules.items():
+        if v is None:
+            out[k] = None
+        elif isinstance(v, str):
+            out[k] = v if v in names else None
+        else:
+            kept = tuple(a for a in v if a in names)
+            out[k] = kept if kept else None
+    return LogicalRules(out)
+
+
+def spec_for(logical_axes: Sequence[Optional[str]], rules: LogicalRules) -> P:
+    """PartitionSpec for one array annotated with logical axis names."""
+    used = set()
+    out = []
+    for name in logical_axes:
+        axes = rules.mesh_axes(name)
+        if axes is None:
+            out.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        free = tuple(a for a in axes if a not in used)
+        used.update(free)
+        out.append(free if len(free) > 1 else (free[0] if free else None))
+    return P(*out)
+
+
+def spec_for_shape(logical_axes: Sequence[Optional[str]],
+                   shape: Sequence[int], rules: LogicalRules,
+                   mesh: Mesh) -> P:
+    """Like spec_for, but drops mesh axes that do not divide the dim size.
+
+    E.g. GQA with 8 KV heads on a 16-wide model axis: the kv_heads dim
+    cannot shard 16 ways, so it is replicated (the standard KV-replication
+    fallback) instead of erroring.
+    """
+    used = set()
+    out = []
+    for name, dim in zip(logical_axes, shape):
+        axes = rules.mesh_axes(name)
+        if axes is None:
+            out.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        kept = []
+        rem = dim
+        for a in axes:
+            if a in used:
+                continue
+            if rem % mesh.shape[a] == 0:
+                kept.append(a)
+                rem //= mesh.shape[a]
+        used.update(kept)
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def shardings_for_tree(axes_tree, mesh: Mesh, rules: LogicalRules):
+    """Map a pytree of logical-axes tuples to a pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, spec_for(axes, rules)),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def batch_spec(rules: LogicalRules, *, seq_sharded: bool = False) -> P:
+    """(batch, seq) PartitionSpec for token arrays."""
+    b = rules.mesh_axes("batch")
+    s = rules.mesh_axes("seq_shard") if seq_sharded else None
+    # Avoid double-assigning an axis to both batch and seq.
+    if s is not None and b is not None:
+        baxes = (b,) if isinstance(b, str) else b
+        saxes = (s,) if isinstance(s, str) else s
+        if set(baxes) & set(saxes):
+            s = None
+    return P(b, s)
+
+
+def activation_rules(rules: LogicalRules, global_batch: int, mesh: Mesh) -> Tuple[LogicalRules, bool]:
+    """Decide whether to switch on sequence parallelism for small batches.
+
+    When the global batch cannot saturate the DP axes (e.g. long_500k with
+    batch=1) we re-map "batch"→None-leftover and "seq_shard"→"data" so the
+    sequence dimension carries the data-axis sharding instead.
+    """
+    dp = 1
+    b = rules.mesh_axes("batch")
+    baxes = (b,) if isinstance(b, str) else (b or ())
+    for a in baxes:
+        dp *= mesh.shape[a]
+    if global_batch % dp == 0:
+        return rules, False
+    # Shrink batch sharding to axes that divide the batch; hand "data" to seq.
+    keep = []
+    rem = global_batch
+    for a in baxes:
+        if rem % mesh.shape[a] == 0 and a != "data":
+            keep.append(a)
+            rem //= mesh.shape[a]
+    new = rules.with_overrides(batch=tuple(keep) or None, seq_shard="data")
+    return new, True

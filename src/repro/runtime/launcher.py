@@ -1,0 +1,83 @@
+"""Cluster launcher: Slurm/env-var plumbing -> jax.distributed -> mesh.
+
+SAKURAONE schedules through Slurm (paper §3); this module is the analogous
+entry path for a TPU/CPU fleet: every process calls ``bootstrap()``, which
+reads the scheduler environment (Slurm or explicit JAX_* vars), initializes
+``jax.distributed``, and returns the production mesh + this process's
+coordinates.  Single-process runs degrade gracefully (no init).
+
+Launch scripts: launch/slurm_train.sbatch (template) drives
+``python -m repro.launch.train`` under ``srun``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterEnv:
+    coordinator: str
+    num_processes: int
+    process_id: int
+    local_devices: Optional[int] = None
+
+    @property
+    def is_distributed(self) -> bool:
+        return self.num_processes > 1
+
+
+def detect_cluster() -> ClusterEnv:
+    """Slurm first (paper's scheduler), then JAX_* overrides, else local."""
+    env = os.environ
+    if "SLURM_JOB_ID" in env and "SLURM_NTASKS" in env:
+        nodelist = env.get("SLURM_STEP_NODELIST", env.get("SLURM_NODELIST", ""))
+        head = nodelist.split(",")[0].replace("[", "").split("-")[0] or "localhost"
+        port = env.get("REPRO_COORD_PORT", "12345")
+        return ClusterEnv(
+            coordinator=f"{head}:{port}",
+            num_processes=int(env["SLURM_NTASKS"]),
+            process_id=int(env.get("SLURM_PROCID", 0)),
+        )
+    if "JAX_COORDINATOR" in env:
+        return ClusterEnv(
+            coordinator=env["JAX_COORDINATOR"],
+            num_processes=int(env.get("JAX_NUM_PROCESSES", 1)),
+            process_id=int(env.get("JAX_PROCESS_ID", 0)),
+        )
+    return ClusterEnv(coordinator="localhost:0", num_processes=1, process_id=0)
+
+
+def bootstrap(*, multi_pod: bool = False, require_chips: Optional[int] = None
+              ) -> Tuple["jax.sharding.Mesh", ClusterEnv]:
+    """Initialize distribution (if any) and build the production mesh.
+
+    require_chips: fail fast if the fleet is smaller than expected — the
+    launcher-level guard that turns silent degraded runs into restarts
+    (the elastic coordinator then decides the remesh).
+    """
+    cluster = detect_cluster()
+    if cluster.is_distributed:
+        jax.distributed.initialize(
+            coordinator_address=cluster.coordinator,
+            num_processes=cluster.num_processes,
+            process_id=cluster.process_id)
+    n = len(jax.devices())
+    if require_chips is not None and n < require_chips:
+        raise RuntimeError(
+            f"fleet has {n} chips < required {require_chips}; "
+            "run the elastic planner (repro.runtime.elastic.plan_remesh) "
+            "or relaunch with more nodes")
+    if n >= 512 and multi_pod:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=True)
+    elif n >= 256:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=False)
+    else:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+    return mesh, cluster

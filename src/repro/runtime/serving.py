@@ -1,0 +1,151 @@
+"""Continuous-batching serving engine (vLLM-style, JAX-native).
+
+The decode_32k / long_500k cells lower a single ``decode_step``; this
+module is the runtime that drives it in production fashion:
+
+  - a request queue; each request = (prompt tokens, max_new_tokens)
+  - a fixed pool of B cache slots (the decode batch); requests are admitted
+    into free slots as others finish (continuous batching — no head-of-line
+    blocking on the longest generation)
+  - per-slot prefill writes the prompt's KV into the slot's cache region;
+    decode steps advance ALL active slots together (one jitted call)
+  - greedy sampling; completion on max_new_tokens (or an optional eos id)
+
+Per-slot prefill is implemented by running the model's ``prefill`` on a
+single row and scattering the resulting K/V into the batched cache at the
+slot index — the same cache layout the dry-run decode cells shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.parallel.sharding import LogicalRules, SINGLE_DEVICE_RULES
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    generated: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    done: bool = False
+    t_submit: float = 0.0
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
+                 rules: LogicalRules = SINGLE_DEVICE_RULES,
+                 opts: Optional[M.RunOptions] = None):
+        self.cfg = cfg
+        self.params = params
+        self.B = slots
+        self.max_len = max_len
+        self.rules = rules
+        self.opts = opts or M.RunOptions(q_chunk=min(max_len, 512))
+        self.cache = M.init_cache(cfg, slots, max_len, self.opts)
+        self.pos = jnp.zeros((slots,), jnp.int32)       # next write position
+        self.active: Dict[int, Request] = {}            # slot -> request
+        self.queue: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self._next_rid = 0
+
+        self._decode = jax.jit(
+            lambda p, c, t, q: M.decode_step(p, cfg, c, t, q, rules, self.opts))
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(p, cfg, b, rules, self.opts))
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> int:
+        req = Request(self._next_rid, np.asarray(prompt, np.int32),
+                      max_new_tokens, eos_id, t_submit=time.perf_counter())
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.B) if s not in self.active]
+
+    # -- admission: per-slot prefill ------------------------------------------
+
+    def _admit(self, req: Request, slot: int):
+        P = len(req.prompt)
+        assert P < self.max_len
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        if self.cfg.frontend == "vision":
+            batch["patches"] = jnp.zeros(
+                (1, self.cfg.frontend_len, self.cfg.frontend_dim), jnp.float32)
+        if self.cfg.frontend == "audio":
+            batch["audio"] = jnp.zeros(
+                (1, self.cfg.encoder_len, self.cfg.frontend_dim), jnp.float32)
+        logits, row_cache = self._prefill(self.params, batch)
+
+        # scatter the single-row cache into this slot's region
+        def place(full, row, k2):
+            if k2 in ("k", "v"):                 # (G,1,P,KVH,hd) -> slot, pad seq
+                pad = self.max_len - row.shape[2]
+                row = jnp.pad(row, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+                return full.at[:, slot].set(row[:, 0])
+            if k2 in ("ck", "cv", "conv", "ssm"):
+                return full.at[:, slot].set(row[:, 0])
+            return full
+        self.cache = {
+            pos: {k2: place(self.cache[pos][k2], row_cache[pos][k2], k2)
+                  for k2 in self.cache[pos]}
+            for pos in self.cache}
+        self.pos = self.pos.at[slot].set(P)
+        first = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(first)
+        req.t_first_token = time.perf_counter()
+        req.slot = slot
+        self.active[slot] = req
+
+    # -- one engine tick -------------------------------------------------------
+
+    def step(self):
+        """Admit queued requests into free slots, then decode one token for
+        every active slot."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            self._admit(self.queue.popleft(), slot)
+        if not self.active:
+            return
+        tok = np.zeros((self.B, 1), np.int32)
+        for slot, req in self.active.items():
+            tok[slot, 0] = req.generated[-1]
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tok), self.pos)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        new_pos = self.pos
+        for slot, req in list(self.active.items()):
+            req.generated.append(int(nxt[slot]))
+            new_pos = new_pos.at[slot].add(1)
+            hit_eos = req.eos_id is not None and nxt[slot] == req.eos_id
+            if len(req.generated) >= req.max_new_tokens or hit_eos:
+                req.done = True
+                req.t_done = time.perf_counter()
+                self.finished.append(req)
+                del self.active[slot]
+        self.pos = new_pos
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        t = 0
+        while (self.queue or self.active) and t < max_ticks:
+            self.step()
+            t += 1
+        return self.finished

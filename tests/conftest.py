@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run is the ONLY place with 512 virtual
+# devices); multi-device collective/sharding tests spawn subprocesses that
+# set XLA_FLAGS themselves (see tests/subproc/).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,89 @@
+"""Fault-tolerance unit + property tests: heartbeats, stragglers, remesh."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.elastic import (ElasticCoordinator, HeartbeatMonitor,
+                                   StragglerDetector, plan_remesh)
+
+
+def test_heartbeat_death_detection():
+    hb = HeartbeatMonitor(timeout_s=10)
+    hb.register("a", now=0.0)
+    hb.register("b", now=0.0)
+    hb.beat("a", now=8.0)
+    assert hb.dead(now=12.0) == ["b"]
+    assert hb.alive(now=12.0) == ["a"]
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(ratio=1.5, min_samples=3)
+    for _ in range(5):
+        for h in ("a", "b", "c", "d"):
+            sd.record(h, 1.0)
+        sd.record("slow", 3.0)
+    assert sd.stragglers() == ["slow"]
+
+
+def test_straggler_needs_samples():
+    sd = StragglerDetector(min_samples=3)
+    sd.record("a", 1.0)
+    sd.record("slow", 100.0)
+    assert sd.stragglers() == []
+
+
+def test_plan_remesh_drops_whole_model_groups():
+    # 10 hosts × 8 devices, model=16 => 2 hosts per model group
+    plan = plan_remesh([f"h{i}" for i in range(9)], 8, 16, num_pods=2)
+    # 72 devices -> 4 whole groups of 16 -> (2, 2, 16)
+    assert plan.mesh_shape == (2, 2, 16)
+    assert plan.dropped_capacity_frac == pytest.approx(1 - 64 / 72)
+
+
+def test_plan_remesh_single_pod_collapse():
+    plan = plan_remesh(["h0", "h1"], 8, 16, num_pods=2)
+    assert plan.mesh_shape == (1, 16)
+    assert plan.axis_names == ("data", "model")
+
+
+def test_plan_remesh_insufficient_raises():
+    with pytest.raises(RuntimeError):
+        plan_remesh(["h0"], 4, 16)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_hosts=st.integers(2, 200), dph=st.sampled_from([4, 8]),
+       mp=st.sampled_from([4, 8, 16]))
+def test_plan_remesh_properties(n_hosts, dph, mp):
+    hosts = [f"h{i}" for i in range(n_hosts)]
+    if n_hosts * dph < mp:
+        with pytest.raises(RuntimeError):
+            plan_remesh(hosts, dph, mp)
+        return
+    plan = plan_remesh(hosts, dph, mp)
+    shape = plan.mesh_shape
+    # model axis always whole
+    assert shape[-1] == mp
+    used = 1
+    for s in shape:
+        used *= s
+    # never uses more than available; wastes less than one model group per pod
+    total = n_hosts * dph
+    assert used <= total
+    assert total - used < mp * (2 if len(shape) == 3 else 1) + dph
+
+
+def test_coordinator_full_cycle():
+    c = ElasticCoordinator([f"h{i}" for i in range(8)], 8, 16,
+                           timeout_s=5, num_pods=2)
+    for h in (f"h{i}" for i in range(8)):
+        c.hb.beat(h, now=0.0)
+    assert c.check(step=1, now=1.0) is None
+    # h7 dies
+    for i in range(7):
+        c.hb.beat(f"h{i}", now=10.0)
+    plan = c.check(step=2, now=10.0)
+    assert plan is not None
+    assert "h7" not in plan.hosts_used
+    assert c.events[-1].kind == "dead"
+    # after eviction the cluster is healthy again
+    assert c.check(step=3, now=10.5) is None

@@ -1,0 +1,83 @@
+"""Loop-aware HLO analyzer: unit tests on hand-built HLO + an end-to-end
+check that trip counts multiply a real scanned program's dot FLOPs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_computations
+
+HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%d), replica_groups=[2,4]<=[8], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+}
+
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,8]) -> (s32[], f32[8,8]) {
+  %arg = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %arg)
+  %ag = f32[16,8] all-gather(%arg), replica_groups=[4,2]<=[8], dimensions={0}
+  %big = f32[16,8] dot(%ag, %arg), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+}
+"""
+
+
+def test_parse_computations():
+    comps = parse_computations(HLO)
+    assert set(comps) == {"body", "cond", "add", "main"}
+    assert any(i.op == "dot" for i in comps["body"])
+
+
+def test_loop_multiplier_applied_to_flops():
+    r = analyze(HLO)
+    # body dot: 2*8*8*8 = 1024 flops × 10 trips; entry dot: 2*16*8*8 = 2048
+    assert r["flops"] == pytest.approx(1024 * 10 + 2048)
+
+
+def test_loop_multiplier_applied_to_collectives():
+    r = analyze(HLO)
+    # all-reduce in body: 8*8*4 bytes × 10; all-gather result 16*8*4 /
+    # group 2 = 256 bytes operand
+    assert r["collective_bytes"]["all-reduce"] == pytest.approx(256 * 10)
+    assert r["collective_bytes"]["all-gather"] == pytest.approx(16 * 8 * 4 / 2)
+    assert r["collective_counts"]["all-reduce"] == 10
+
+
+def test_real_program_trip_count_scaling():
+    """A jitted scan with N iterations must report ≈N× the dot flops of a
+    single iteration (the exact bug in cost_analysis this module fixes)."""
+    def f(x, n):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=n)
+        return y
+
+    x = jnp.eye(16)
+    txt5 = jax.jit(lambda v: f(v, 5)).lower(x).compile().as_text()
+    txt10 = jax.jit(lambda v: f(v, 10)).lower(x).compile().as_text()
+    f5 = analyze(txt5)["flops"]
+    f10 = analyze(txt10)["flops"]
+    assert f5 > 0
+    assert f10 == pytest.approx(2 * f5, rel=0.05)

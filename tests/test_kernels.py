@@ -1,0 +1,162 @@
+"""Per-kernel allclose vs pure-jnp oracles, swept over shapes & dtypes
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fp8_matmul import fp8_matmul_pallas
+from repro.core.mixed_precision import F8_MAX
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (100, 70, 50), (33, 128, 257)])
+def test_fp8_matmul_vs_oracle(m, k, n):
+    """Kernel output == oracle on identical quantized inputs (bit-level
+    fp8 path), swept over aligned and ragged shapes."""
+    key = jax.random.PRNGKey(m * 1000 + k + n)
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    out = ops.fp8_matmul(a, b, interpret=True)
+    # Oracle path: same padding/quantization as the wrapper
+    bm = bn = bk = 128
+    pad = lambda x, mult, ax: jnp.pad(
+        x, [(0, (-x.shape[0]) % mult if ax == 0 else 0),
+            (0, (-x.shape[1]) % mult if ax == 1 else 0)])
+    ap = pad(pad(a, bm, 0), bk, 1)
+    bp = pad(pad(b, bk, 0), bn, 1)
+    mm, kk = ap.shape
+    nn = bp.shape[1]
+    sa = jnp.maximum(jnp.max(jnp.abs(ap.reshape(mm // bm, bm, kk)), axis=(1, 2)), 1e-12) / F8_MAX
+    sb = jnp.maximum(jnp.max(jnp.abs(bp.reshape(kk, nn // bn, bn)), axis=(0, 2)), 1e-12) / F8_MAX
+    aq = (ap / jnp.repeat(sa, bm)[:, None]).astype(jnp.float8_e4m3fn)
+    bq = (bp / jnp.repeat(sb, bn)[None, :]).astype(jnp.float8_e4m3fn)
+    want = ref.fp8_matmul_ref(aq, bq, sa, sb, bm=bm, bn=bn)[:m, :n]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (512, 128, 256)])
+def test_fp8_matmul_quant_error_bounded(m, k, n):
+    """End-to-end fp8 error vs exact f32 matmul stays within e4m3 bounds."""
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 7), (k, n), jnp.float32)
+    out = ops.fp8_matmul(a, b, interpret=True)
+    exact = a @ b
+    rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.08, rel                     # e4m3 ~2 mantissa bits
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,skv,h,kvh,d", [
+    (64, 64, 4, 4, 32), (128, 128, 8, 2, 64), (96, 200, 4, 1, 32),
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 32),
+                                           (False, None)])
+def test_flash_attention_sweep(dtype, sq, skv, h, kvh, d, causal, window):
+    if not causal and sq != skv:
+        pass  # cross-attention case — exercised below too
+    key = jax.random.PRNGKey(sq + skv + h)
+    q = jax.random.normal(key, (2, sq, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, skv, kvh, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, skv, kvh, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=32, bk=32, interpret=True)
+    rep = h // kvh
+    kf = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3).reshape(2 * h, skv, d)
+    vf = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3).reshape(2 * h, skv, d)
+    qf = q.transpose(0, 2, 1, 3).reshape(2 * h, sq, d)
+    want = ref.attention_ref(qf, kf, vf, causal=causal, window=window)
+    want = want.reshape(2, h, sq, d).transpose(0, 2, 1, 3)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("rows,d", [(64, 64), (100, 128), (256, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(rows, d, dtype):
+    key = jax.random.PRNGKey(rows + d)
+    x = jax.random.normal(key, (rows, d), dtype) * 3.0
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32) * 0.2
+    out = ops.rmsnorm(x, w, bm=32, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=atol)
+
+
+def test_flash_matches_model_attention_path():
+    """The kernel agrees with the model's chunked-jnp attention module."""
+    from repro.configs.base import ModelConfig
+    from repro.models.attention import attention, attn_specs
+    from repro.models.modules import init_params
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                      head_dim=16)
+    params = init_params(attn_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64), jnp.float32)
+    out_model, (k, v) = attention(params, cfg, x, q_chunk=32)
+    # reproduce with the kernel on the same projected q/k/v
+    import repro.models.attention as A
+    q, k2, v2 = A._project_qkv(params, cfg, x, x,
+                               jnp.broadcast_to(jnp.arange(64), (2, 64)),
+                               jnp.broadcast_to(jnp.arange(64), (2, 64)))
+    out_kernel = ops.flash_attention(q, k2, v2, causal=True, bq=32, bk=32,
+                                     interpret=True)
+    proj = jnp.einsum("bshd,hdD->bsD", out_kernel, params["wo"])
+    np.testing.assert_allclose(np.asarray(proj), np.asarray(out_model),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("t,h,kvh,d", [(64, 4, 4, 32), (160, 8, 2, 64),
+                                       (96, 4, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(t, h, kvh, d, dtype):
+    from repro.kernels.decode_attention import decode_attention_pallas
+    key = jax.random.PRNGKey(t + h)
+    B = 3
+    q = jax.random.normal(key, (B, 1, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, t, kvh, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, t, kvh, d), dtype)
+    lengths = jnp.array([t, t // 2, 1], jnp.int32)
+    out = ops.decode_attention(q, k, v, lengths, bk=32, interpret=True)
+    rep = h // kvh
+    kf = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3).reshape(B * h, t, d)
+    vf = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3).reshape(B * h, t, d)
+    qf = q[:, 0].reshape(B * h, d)
+    want = ref.decode_attention_ref(qf, kf, vf, jnp.repeat(lengths, h))
+    want = want.reshape(B, 1, h, d)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_decode_attention_matches_model_decode_path():
+    """Kernel agrees with the model's decode_attention (cache semantics)."""
+    from repro.configs.base import ModelConfig
+    from repro.models.attention import decode_attention as model_decode
+    from repro.models.modules import init_params
+    from repro.models.attention import attn_specs
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                      head_dim=16, rope_theta=1e4)
+    params = init_params(attn_specs(cfg), jax.random.PRNGKey(0))
+    B, T = 2, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, 64), jnp.float32)
+    ck = jax.random.normal(jax.random.PRNGKey(2), (B, T, 2, 16)) * 0.5
+    cv = jax.random.normal(jax.random.PRNGKey(3), (B, T, 2, 16)) * 0.5
+    pos = jnp.array([10, 31], jnp.int32)
+    out_model, k_new, v_new = model_decode(params, cfg, x, ck, cv, pos)
+    # reproduce via kernel on the updated cache
+    import repro.models.attention as A
+    q, _, _ = A._project_qkv(params, cfg, x, x, pos[:, None], pos[:, None])
+    out_k = ops.decode_attention(q, k_new, v_new, pos + 1, bk=32,
+                                 interpret=True)
+    proj = jnp.einsum("bshd,hdD->bsD", out_k, params["wo"])
+    np.testing.assert_allclose(np.asarray(proj), np.asarray(out_model),
+                               rtol=2e-4, atol=2e-4)

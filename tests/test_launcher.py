@@ -1,0 +1,51 @@
+"""Launcher env detection + bootstrap guard tests."""
+import os
+
+import pytest
+
+from repro.runtime.launcher import ClusterEnv, bootstrap, detect_cluster
+
+
+@pytest.fixture
+def clean_env(monkeypatch):
+    for k in ("SLURM_JOB_ID", "SLURM_NTASKS", "SLURM_PROCID",
+              "SLURM_NODELIST", "JAX_COORDINATOR", "JAX_NUM_PROCESSES",
+              "JAX_PROCESS_ID"):
+        monkeypatch.delenv(k, raising=False)
+    return monkeypatch
+
+
+def test_detect_local(clean_env):
+    c = detect_cluster()
+    assert not c.is_distributed
+    assert c.num_processes == 1
+
+
+def test_detect_slurm(clean_env):
+    clean_env.setenv("SLURM_JOB_ID", "42")
+    clean_env.setenv("SLURM_NTASKS", "64")
+    clean_env.setenv("SLURM_PROCID", "7")
+    clean_env.setenv("SLURM_NODELIST", "node001,node002")
+    c = detect_cluster()
+    assert c.is_distributed and c.num_processes == 64 and c.process_id == 7
+    assert c.coordinator.startswith("node001")
+
+
+def test_detect_jax_env(clean_env):
+    clean_env.setenv("JAX_COORDINATOR", "10.0.0.1:1234")
+    clean_env.setenv("JAX_NUM_PROCESSES", "4")
+    clean_env.setenv("JAX_PROCESS_ID", "2")
+    c = detect_cluster()
+    assert c.coordinator == "10.0.0.1:1234"
+    assert (c.num_processes, c.process_id) == (4, 2)
+
+
+def test_bootstrap_local_mesh(clean_env):
+    mesh, cluster = bootstrap()
+    assert not cluster.is_distributed
+    assert mesh.size >= 1
+
+
+def test_bootstrap_fleet_guard(clean_env):
+    with pytest.raises(RuntimeError, match="elastic"):
+        bootstrap(require_chips=512)

@@ -1,0 +1,45 @@
+"""Multi-device integration tests, run in subprocesses so the main test
+session keeps seeing exactly ONE device (the dry-run is the only 512-device
+context; these use 8)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+def run_script(name, timeout=900):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "subproc", name)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL_OK" in proc.stdout, proc.stdout
+    return proc.stdout
+
+
+def test_hierarchical_and_compressed_collectives():
+    out = run_script("check_collectives.py")
+    assert "OK hierarchical==flat" in out
+    assert "OK compressed" in out
+    assert "OK single-pod fallback" in out
+
+
+def test_sharded_train_matches_single_device_and_elastic_restore():
+    out = run_script("check_sharded_train.py")
+    assert "OK sharded==single" in out
+    assert "OK elastic-restore" in out
+    assert "OK sharded-decode" in out
+
+
+def test_distributed_hpl_matches_reference():
+    out = run_script("check_collectives.py")
+    assert "OK distributed-hpl" in out
+
+
+def test_pipeline_parallel_matches_reference():
+    out = run_script("check_pipeline.py")
+    assert "OK pipeline==reference" in out

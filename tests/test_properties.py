@@ -1,0 +1,94 @@
+"""Cross-cutting property tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.mixed_precision import quantize_fp8, F8_MAX
+from repro.core.topology import (RailTopology, hierarchical_allreduce_cost,
+                                 flat_allreduce_cost, roofline)
+from repro.launch.hlo_analysis import analyze
+
+
+# -- fp8 quantization ---------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**16))
+def test_fp8_quantization_relative_error_bound(scale, seed):
+    """Property: e4m3 round-trip relative error < 2^-2 on the max element
+    and the quantized representation never overflows the format."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    q, s = quantize_fp8(x)
+    assert float(jnp.max(jnp.abs(q.astype(jnp.float32)))) <= F8_MAX
+    err = jnp.abs(q.astype(jnp.float32) * s - x)
+    assert float(jnp.max(err)) <= float(jnp.max(jnp.abs(x))) * 0.25 + 1e-9
+
+
+# -- topology cost model -------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(gb=st.floats(1e6, 1e11), in_pod=st.sampled_from([2, 4, 8, 16]),
+       pods=st.sampled_from([2, 4]))
+def test_hierarchical_never_worse_than_flat(gb, in_pod, pods):
+    hier, _ = hierarchical_allreduce_cost(gb, in_pod, pods)
+    flat = flat_allreduce_cost(gb, in_pod, pods)
+    assert hier <= flat * (1 + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(src=st.integers(0, 799), dst=st.integers(0, 799))
+def test_rail_hops_valid(src, dst):
+    t = RailTopology()
+    h = t.hops(src, dst)
+    assert h in (0, 1, 3)
+    assert t.hops(src, src) == 0
+    assert t.hops(src, dst) == t.hops(dst, src)
+
+
+@settings(max_examples=30, deadline=None)
+@given(f=st.floats(1e9, 1e18), b=st.floats(1e6, 1e15),
+       c=st.floats(0, 1e14), n=st.sampled_from([1, 16, 256, 512]))
+def test_roofline_dominant_is_max(f, b, c, n):
+    rt = roofline(f, b, c, n)
+    terms = {"compute": rt.compute_s, "memory": rt.memory_s,
+             "collective": rt.collective_s}
+    assert terms[rt.dominant] == max(terms.values())
+
+
+# -- checkpoint round trip -----------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(shapes=st.lists(
+    st.tuples(st.integers(1, 7), st.integers(1, 9)), min_size=1, max_size=4),
+    stripes=st.integers(1, 5), seed=st.integers(0, 100))
+def test_checkpoint_roundtrip_random_trees(tmp_path_factory, shapes, stripes,
+                                           seed):
+    rng = np.random.default_rng(seed)
+    tree = {f"leaf{i}": jnp.asarray(rng.normal(size=s).astype(
+        rng.choice(["float32", "float16"]))) for i, s in enumerate(shapes)}
+    root = tmp_path_factory.mktemp("ck")
+    mgr = CheckpointManager(str(root), stripes=stripes)
+    mgr.save(1, tree)
+    _, got = mgr.restore(tree)
+    for k in tree:
+        assert np.array_equal(np.asarray(tree[k]), np.asarray(got[k]))
+        assert got[k].dtype == np.asarray(tree[k]).dtype
+
+
+# -- loop-aware HLO analyzer ---------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(n1=st.integers(2, 6), n2=st.integers(2, 6))
+def test_hlo_flops_scale_linearly_with_trip_count(n1, n2):
+    def f(x, n):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=n)
+        return y
+    x = jnp.eye(8)
+    f1 = analyze(jax.jit(lambda v: f(v, n1)).lower(x).compile().as_text())["flops"]
+    f2 = analyze(jax.jit(lambda v: f(v, n2)).lower(x).compile().as_text())["flops"]
+    assert f1 > 0 and f2 > 0
+    assert f2 / f1 == pytest.approx(n2 / n1, rel=0.05)

@@ -1,0 +1,77 @@
+"""Continuous-batching engine: correctness vs the plain serve path,
+slot reuse, and mixed-length scheduling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models import model as M
+from repro.parallel.sharding import SINGLE_DEVICE_RULES
+from repro.runtime.serving import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = reduced_config(get_config("qwen3-1.7b"))
+    params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def greedy_reference(cfg, params, prompt, n):
+    """Naive reference: full re-prefill per generated token."""
+    toks = list(np.asarray(prompt))
+    opts = M.RunOptions(q_chunk=512)
+    out = []
+    for _ in range(n):
+        batch = {"tokens": jnp.asarray(toks, jnp.int32)[None]}
+        logits, _ = M.prefill(params, cfg, batch, SINGLE_DEVICE_RULES, opts)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        toks.append(nxt)
+    return out
+
+
+def test_engine_matches_naive_greedy(engine_setup):
+    cfg, params = engine_setup
+    prompt = np.arange(7, dtype=np.int32) % cfg.vocab_size
+    eng = ServingEngine(cfg, params, slots=2, max_len=32)
+    eng.submit(prompt, max_new_tokens=5)
+    done = eng.run()
+    assert len(done) == 1
+    want = greedy_reference(cfg, params, prompt, 5)
+    assert done[0].generated == want
+
+
+def test_continuous_batching_slot_reuse(engine_setup):
+    cfg, params = engine_setup
+    eng = ServingEngine(cfg, params, slots=2, max_len=48)
+    # 5 requests, 2 slots: scheduling must reuse slots as requests finish
+    rids = [eng.submit(np.arange(3 + i, dtype=np.int32),
+                       max_new_tokens=2 + (i % 3)) for i in range(5)]
+    done = eng.run()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    for r in done:
+        assert len(r.generated) == r.max_new_tokens
+        assert r.t_first_token is not None and r.t_done is not None
+
+
+def test_mixed_lengths_isolated(engine_setup):
+    """Requests sharing a decode batch must not contaminate each other:
+    the same prompt gives the same tokens whether run alone or alongside
+    other requests."""
+    cfg, params = engine_setup
+    prompt = (np.arange(9, dtype=np.int32) * 3) % cfg.vocab_size
+    solo = ServingEngine(cfg, params, slots=2, max_len=40)
+    solo.submit(prompt, max_new_tokens=6)
+    ref = solo.run()[0].generated
+
+    busy = ServingEngine(cfg, params, slots=2, max_len=40)
+    busy.submit((np.arange(5, dtype=np.int32) * 7) % cfg.vocab_size,
+                max_new_tokens=9)
+    busy.submit(prompt, max_new_tokens=6)
+    busy.submit((np.arange(4, dtype=np.int32) * 11) % cfg.vocab_size,
+                max_new_tokens=3)
+    done = busy.run()
+    got = next(r for r in done if len(r.prompt) == 9).generated
+    assert got == ref

@@ -1,0 +1,87 @@
+"""Property tests (hypothesis) for the logical-axis sharding system."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.sharding import (DEFAULT_RULES, LogicalRules,
+                                     activation_rules, rules_for_mesh,
+                                     spec_for, spec_for_shape, batch_spec)
+
+
+def fake_mesh(shape=(2, 2), names=("data", "model")):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[:int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), names)
+
+
+def test_spec_for_basic():
+    rules = LogicalRules({"a": "data", "b": "model", "c": None})
+    assert spec_for(("a", "b"), rules) == P("data", "model")
+    assert spec_for(("c", None, "a"), rules) == P(None, None, "data")
+
+
+def test_spec_for_no_duplicate_axis():
+    rules = LogicalRules({"a": "data", "b": "data"})
+    s = spec_for(("a", "b"), rules)
+    used = [x for x in s if x is not None]
+    assert len(used) == len(set(used)) == 1
+
+
+def test_spec_for_shape_drops_nondividing():
+    mesh = fake_mesh((2, 2))
+    rules = LogicalRules({"kv": "model", "d": "data"})
+    # 3 is not divisible by 2 -> replicated
+    s = spec_for_shape(("kv", "d"), (3, 8), rules, mesh)
+    assert s == P(None, "data")
+
+
+@settings(max_examples=50, deadline=None)
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       axes=st.lists(st.sampled_from(["batch", "embed", "heads", "ff", None]),
+                     min_size=1, max_size=4))
+def test_spec_for_shape_always_divides(dims, axes):
+    """Property: every sharded dim is divisible by its mesh-axes product."""
+    n = min(len(dims), len(axes))
+    dims, axes = dims[:n], axes[:n]
+    mesh = fake_mesh((2, 2))
+    rules = rules_for_mesh(mesh, DEFAULT_RULES)
+    spec = spec_for_shape(tuple(axes), tuple(dims), rules, mesh)
+    for dim, s in zip(dims, spec):
+        if s is None:
+            continue
+        ax = (s,) if isinstance(s, str) else s
+        prod = int(np.prod([mesh.shape[a] for a in ax]))
+        assert dim % prod == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(gb=st.integers(1, 512))
+def test_activation_rules_batch_always_divisible(gb):
+    mesh = fake_mesh((2, 2), ("data", "model"))
+    rules = rules_for_mesh(mesh, DEFAULT_RULES)
+    out, seq_sharded = activation_rules(rules, gb, mesh)
+    b = out.mesh_axes("batch")
+    baxes = (b,) if isinstance(b, str) else (b or ())
+    dp = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    assert gb % dp == 0
+    if gb % 2 != 0:               # cannot use the data axis for batch
+        assert seq_sharded
+
+
+def test_rules_for_mesh_strips_missing_axes():
+    mesh = fake_mesh((4,), ("data",))
+    rules = rules_for_mesh(mesh, DEFAULT_RULES)
+    assert rules.mesh_axes("heads") is None          # no 'model' axis
+    assert rules.mesh_axes("batch") == ("data",)
+
+
+def test_batch_spec_no_axis_collision():
+    rules = LogicalRules({"batch": ("pod", "data"), "seq_shard": "data"})
+    s = batch_spec(rules, seq_sharded=True)
+    flat = []
+    for e in s:
+        if e is None:
+            continue
+        flat.extend((e,) if isinstance(e, str) else e)
+    assert len(flat) == len(set(flat))

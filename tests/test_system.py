@@ -1,0 +1,87 @@
+"""End-to-end system tests: the train driver trains (loss ↓), checkpoints
+restart exactly, the serve driver generates, mixed-precision training path
+runs, and the paper's headline claims hold in miniature."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import train
+from repro.launch.serve import serve
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    ck = str(tmp_path_factory.mktemp("ckpt"))
+    losses = train("qwen3-1.7b", steps=30, batch=8, seq=64, reduced=True,
+                   ckpt_dir=ck, ckpt_every=10, log_every=1000,
+                   lr_peak=3e-3, total_steps=300)
+    return ck, losses
+
+
+def test_training_reduces_loss(trained):
+    _, losses = trained
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.05, (first, last)
+
+
+def test_restart_continues_from_checkpoint(trained):
+    ck, losses = trained
+    more = train("qwen3-1.7b", steps=33, batch=8, seq=64, reduced=True,
+                 ckpt_dir=ck, ckpt_every=100, log_every=1000,
+                 lr_peak=3e-3, total_steps=300)
+    # resumed run only covers steps 30..32
+    assert len(more) == 3
+    assert np.isfinite(more).all()
+    assert np.mean(more) < np.mean(losses[:5])
+
+
+def test_injected_failure_then_recovery(tmp_path):
+    """Crash mid-run, restart, and the stream replays deterministically."""
+    ck = str(tmp_path / "ck")
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train("mamba2-130m", steps=20, batch=4, seq=64, reduced=True,
+              ckpt_dir=ck, ckpt_every=5, fail_at_step=12, log_every=1000)
+    # recovery resumes from the last committed step (10), not zero
+    losses = train("mamba2-130m", steps=14, batch=4, seq=64, reduced=True,
+                   ckpt_dir=ck, ckpt_every=100, log_every=1000)
+    assert len(losses) == 4                     # steps 10..13
+    assert np.isfinite(losses).all()
+
+
+def test_serve_generates_tokens():
+    r = serve("qwen3-1.7b", batch=2, prompt_len=16, gen=8)
+    gen = np.asarray(r["generated"])
+    assert gen.shape == (2, 8)
+    assert (gen >= 0).all()
+    assert r["tokens_per_s"] > 0
+
+
+def test_serve_greedy_deterministic():
+    r1 = serve("llama3-8b", batch=2, prompt_len=12, gen=6, seed=3)
+    r2 = serve("llama3-8b", batch=2, prompt_len=12, gen=6, seed=3)
+    assert np.array_equal(np.asarray(r1["generated"]),
+                          np.asarray(r2["generated"]))
+
+
+def test_paper_headline_lowprec_claim():
+    """Table 9's structural claim in miniature: the FP8/bf16 LU does the
+    same O(n³) factor work at lower precision and IR recovers an answer
+    that passes the same validation gate as full-precision HPL.  (The
+    paper's 10× wall-clock win needs FP8 compute units; timing is NOT
+    asserted on CPU — see benchmarks/run.py table9 note.)"""
+    from repro.core.hplmxp import run_hplmxp
+    from repro.core.hpl import run_hpl
+    hpl = run_hpl(256, 64)
+    mxp = run_hplmxp(256, 64, lowprec="bf16", ir_iters=6)
+    assert hpl["passed"] and mxp["passed"]
+    # refinement monotone-ish: final residual <= first
+    assert mxp["ir_history"][-1] <= mxp["ir_history"][0]
+    # IR work is O(n²)/iter vs O(n³) factorization: at the paper's scale
+    # (Table 9, N=2,989,056) refinement is noise — structural check
+    n_paper = 2_989_056
+    ir_flops = 6 * 3 * 2 * n_paper ** 2   # iters × (matvec + 2 tri-solves)
+    assert ir_flops < (2 / 3) * n_paper ** 3 * 1e-3
