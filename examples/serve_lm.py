@@ -1,23 +1,44 @@
-"""Batched serving example: prefill a batch of prompts, decode with greedy
-sampling from the KV cache (the same decode_step the decode_32k /
-long_500k dry-run cells lower).
+"""Serving example: static batch or the paged continuous-batching engine.
+
+``--engine batch`` prefills a batch of equal-length prompts and decodes
+them in lockstep; ``--engine paged`` streams mixed-length requests
+through the paged-KV engine (shared page pool, chunked prefill,
+continuous admission) and prints its serving metrics.
 
   PYTHONPATH=src python examples/serve_lm.py --arch gemma3-12b --gen 24
+  PYTHONPATH=src python examples/serve_lm.py --engine paged \
+      --arch qwen3-1.7b --requests 8
 """
 import argparse
 
-from repro.launch.serve import serve
+from repro.launch.serve import serve, serve_paged
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=("batch", "paged"), default="batch")
     ap.add_argument("--arch", default="gemma3-12b",
                     help="gemma3 exercises the 5:1 local:global attention "
                          "cache (sliding-window + global layers)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8)
     args = ap.parse_args()
+    if args.engine == "paged":
+        r = serve_paged(args.arch, requests=args.requests, gen=args.gen)
+        m = r["metrics"]
+        print(f"served:  {m['completed']:.0f} requests, "
+              f"{m['generated_tokens']:.0f} tokens "
+              f"({m['tokens_per_s']:.1f} tok/s)")
+        print(f"ttft:    avg {m['ttft_avg_s'] * 1e3:.0f} ms, "
+              f"max {m['ttft_max_s'] * 1e3:.0f} ms")
+        print(f"pages:   peak {m['peak_pages_in_use']:.0f}/"
+              f"{m['page_capacity']:.0f} "
+              f"(util {m['peak_page_utilization']:.2f})")
+        for req in r["finished"][:4]:
+            print(f"  request[{req.rid}] -> {req.generated}")
+        return
     r = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
               gen=args.gen)
     print(f"prefill: {r['prefill_s'] * 1e3:.0f} ms")

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 test gate, exactly as CI runs it (ROADMAP.md "Tier-1 verify").
+#
+#   scripts/run_tests.sh              # full tier-1 suite
+#   FAST=1 scripts/run_tests.sh       # skip slow/multidevice tests
+#   scripts/run_tests.sh tests/test_paged_kv.py   # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+extra=()
+if [[ "${FAST:-0}" == "1" ]]; then
+  extra+=(-m "not slow and not multidevice")
+fi
+exec python -m pytest -x -q "${extra[@]}" "$@"

@@ -1,0 +1,39 @@
+"""Cross-version JAX API aliases.
+
+The repo targets the 0.5+ names; the installed 0.4.x exposes some of
+them elsewhere.  Import the alias from here instead of feature-detecting
+at each call site (see also kernels/_compat.py for the Pallas-TPU names
+and launch/mesh.py for AxisType).
+"""
+from __future__ import annotations
+
+import jax
+
+# True when shard_map supports partial-manual regions (axis_names=...,
+# remaining axes auto-sharded by GSPMD).  On 0.4.x the compat wrapper
+# below falls back to FULL manual, so code inside such regions must not
+# emit sharding constraints over the would-be-auto axes.
+SHARD_MAP_PARTIAL_AUTO = hasattr(jax, "shard_map")
+
+try:
+    shard_map = jax.shard_map                      # jax >= 0.5
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map  # 0.4.x
+
+    def shard_map(f, *args, **kwargs):
+        if "check_vma" in kwargs:                  # 0.5 name for check_rep
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        # 0.5 lists the manual axes (axis_names=); 0.4's equivalent
+        # (auto= the complement) hits NotImplementedError when lowered, so
+        # fall back to FULL manual: unmentioned axes replicate compute
+        # inside the region instead of auto-sharding it — identical
+        # numbers, less intra-region parallelism (fine for tests).
+        kwargs.pop("axis_names", None)
+        return _shard_map(f, *args, **kwargs)
+
+
+def axis_size(name):
+    """Static size of a named mesh axis inside shard_map."""
+    if hasattr(jax.lax, "axis_size"):              # jax >= 0.5
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)                   # folds to a constant

@@ -1,0 +1,11 @@
+"""Pallas-TPU API compatibility across installed JAX versions.
+
+JAX renamed ``pltpu.TPUCompilerParams`` (0.4.x) to ``pltpu.CompilerParams``
+(0.5+); kernels import the alias from here so either version lowers.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -84,7 +86,100 @@ def decode_attention_pallas(q, k, v, lengths, *, bk: int = 256,
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (gather-over-page-table)
+# ---------------------------------------------------------------------------
+#
+# The serving engine stores KV in fixed-size pages drawn from a shared pool;
+# a request's cache is the (non-contiguous) set of pages named by its page
+# table.  The kernel walks the page table with scalar prefetch: the block
+# index_map reads ``page_table[b, i]`` so the DMA for grid step (b, i) pulls
+# exactly that physical page HBM->VMEM — no contiguous copy of the request's
+# KV is ever materialized.
+
+
+def _paged_decode_kernel(len_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale: float, page: int,
+                         n_pages: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    # pages entirely beyond the valid length are dead (their table entries
+    # point at the scratch page) — skip the whole tile
+    @pl.when(i * page < length)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)                  # (1, d)
+        k = k_ref[0].astype(jnp.float32)                    # (page, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = i * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)            # (1, page)
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_old - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                    # (page, d)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q, k_pages, v_pages, page_table, lengths, *,
+                                  interpret: bool = False):
+    """Decode attention over a paged KV pool.
+
+    q: (BH, d); k_pages/v_pages: (P, page, d) shared physical pool;
+    page_table: (BH, n) int32 — physical page of each row's i-th logical
+    page (dead entries must still name a valid page, e.g. scratch page 0);
+    lengths: (BH,) valid-key counts.  Returns (BH, d) in q.dtype.
+    """
+    bh, d = q.shape
+    _, page, _ = k_pages.shape
+    n_pages = page_table.shape[1]
+    scale = d ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # lengths, page_table
+        grid=(bh, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, i, lens, pt: (b, 0)),
+            pl.BlockSpec((1, page, d), lambda b, i, lens, pt: (pt[b, i], 0, 0)),
+            pl.BlockSpec((1, page, d), lambda b, i, lens, pt: (pt[b, i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, i, lens, pt: (b, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=scale, page=page,
+                          n_pages=n_pages),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), q,
+      k_pages, v_pages)

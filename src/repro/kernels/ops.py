@@ -116,3 +116,34 @@ def decode_attention(q, k, v, lengths, *, bk: int = 256,
     out = decode_attention_pallas(qf, kf, vf, lens.astype(jnp.int32),
                                   bk=bk, interpret=interpret)
     return out.reshape(B, H, d)[:, None].transpose(0, 1, 2, 3).reshape(B, 1, H, d)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           interpret: bool | None = None):
+    """Single-token decode attention over a paged KV pool.
+
+    q: (B, 1, H, d); k_pages/v_pages: (P, page, KVH, d) shared pool;
+    page_table: (B, n) int32 per-request logical->physical page map;
+    lengths: (B,) valid-key counts.  Returns (B, 1, H, d).
+
+    GQA expansion happens on the *page table*, not the pool: head h of
+    request b reads pages ``kvh(h) * P + page_table[b]`` of the pool
+    flattened to (KVH*P, page, d) — the big KV arrays are never repeated.
+    """
+    from repro.kernels.decode_attention import paged_decode_attention_pallas
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, _, H, d = q.shape
+    P, page, KVH, _ = k_pages.shape
+    rep = H // KVH
+    n = page_table.shape[1]
+    kf = k_pages.transpose(2, 0, 1, 3).reshape(KVH * P, page, d)
+    vf = v_pages.transpose(2, 0, 1, 3).reshape(KVH * P, page, d)
+    head_base = (jnp.arange(H, dtype=jnp.int32) // rep) * P          # (H,)
+    pt = (head_base[None, :, None] + page_table[:, None, :]
+          ).reshape(B * H, n)
+    qf = q[:, 0].reshape(B * H, d)
+    lens = jnp.repeat(lengths, H)
+    out = paged_decode_attention_pallas(qf, kf, vf, pt.astype(jnp.int32),
+                                        lens.astype(jnp.int32),
+                                        interpret=interpret)
+    return out.reshape(B, 1, H, d)

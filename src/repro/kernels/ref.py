@@ -51,3 +51,14 @@ def decode_attention_ref(q, k, v, lengths):
     s = jnp.where(t < lengths[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bt,btd->bd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """Oracle for paged decode: gather each row's pages into a contiguous
+    cache, then dense decode.  q: (BH, d); k_pages/v_pages: (P, page, d);
+    page_table: (BH, n) int32; lengths: (BH,)."""
+    bh = q.shape[0]
+    _, page, d = k_pages.shape
+    k = k_pages[page_table].reshape(bh, -1, d)     # (BH, n*page, d)
+    v = v_pages[page_table].reshape(bh, -1, d)
+    return decode_attention_ref(q, k, v, lengths)

@@ -1,11 +1,16 @@
-"""Serving driver: batched prefill + decode loop with KV cache.
+"""Serving drivers: static-batch loop and the paged continuous engine.
 
-Serves a (reduced, on CPU) model: requests are batched, prompts prefilled
-in one shot, then tokens decode step-by-step with greedy sampling.  The
-same ``decode_step`` lowers the decode_32k / long_500k dry-run cells.
+``serve`` is the static path: one batch of equal-length prompts prefilled
+in one shot, then lockstep decode (the decode_32k / long_500k dry-run
+cells lower the same ``decode_step``).  ``serve_paged`` drives the
+paged-KV continuous-batching engine (``runtime.serving.PagedServing
+Engine``) over a mixed-length request stream and reports engine metrics
+(TTFT, tokens/s, page utilization).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
       --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --engine paged \
+      --arch qwen3-1.7b --requests 8 --gen 16
 """
 from __future__ import annotations
 
@@ -14,11 +19,13 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduced_config, make_example_batch
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.parallel.sharding import rules_for_mesh, DEFAULT_RULES
+from repro.runtime.serving import PagedServingEngine
 
 
 def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
@@ -75,13 +82,52 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
     }
 
 
+def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
+                page_size: int = 16, num_pages: int = 128,
+                max_seats: int = 8, prefill_chunk: int = 32,
+                reduced: bool = True, seed: int = 0):
+    """Drive the paged engine over a mixed-length request stream."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = reduced_config(cfg)
+    params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(seed),
+                           dtype=jnp.float32)
+    eng = PagedServingEngine(cfg, params, page_size=page_size,
+                             num_pages=num_pages, max_seats=max_seats,
+                             max_seq_len=3 * page_size + gen,
+                             prefill_chunk=prefill_chunk)
+    rng = np.random.default_rng(seed)
+    for _ in range(requests):
+        plen = int(rng.integers(4, 3 * page_size))
+        eng.submit(rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                   max_new_tokens=int(rng.integers(2, gen + 1)))
+    done = eng.run()
+    return {"finished": done, "metrics": eng.metrics.snapshot()}
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=("batch", "paged"), default="batch")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=128)
     args = ap.parse_args()
+    if args.engine == "paged":
+        r = serve_paged(args.arch, requests=args.requests, gen=args.gen,
+                        page_size=args.page_size, num_pages=args.num_pages)
+        m = r["metrics"]
+        print(f"[serve.paged] {m['completed']:.0f} requests "
+              f"{m['generated_tokens']:.0f} tokens in {m['wall_s'] * 1e3:.0f}ms "
+              f"({m['tokens_per_s']:.1f} tok/s) "
+              f"ttft_avg={m['ttft_avg_s'] * 1e3:.0f}ms "
+              f"peak_page_util={m['peak_page_utilization']:.2f}")
+        print("[serve.paged] sample tokens:",
+              r["finished"][0].generated[:12])
+        return
     r = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
               gen=args.gen)
     print(f"[serve] prefill={r['prefill_s'] * 1e3:.0f}ms "

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.configs.registry import input_specs, input_axes
 from repro.models import model as M
@@ -196,7 +198,7 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                 x_emb = jnp.take(params["embed"], batch["tokens"], axis=0)
                 bb = dict(batch, tok_embeds=x_emb)
                 in_batch_specs = {k: P("pod") for k in bb}
-                fn = jax.shard_map(
+                fn = shard_map(
                     body, mesh=mesh, axis_names={"pod"},
                     in_specs=(P(), P(), in_batch_specs),
                     out_specs=(P(), P(), P(), P(), P("pod")),

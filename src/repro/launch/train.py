@@ -79,25 +79,30 @@ def train(arch: str, *, steps: int = 20, batch: int = 8, seq: int = 128,
             print(f"[train] restored from step {start}")
 
         losses = []
-        for step in range(start, steps):
-            if fail_at_step is not None and step == fail_at_step:
-                raise RuntimeError(f"injected failure at step {step}")
-            t0 = time.perf_counter()
-            batch_arrs = pipe.get_batch(step)
-            params, opt, metrics = step_fn(params, opt, batch_arrs)
-            loss = float(metrics["loss"])
-            dt = time.perf_counter() - t0
-            coord.straggle.record("host0", dt)
-            coord.hb.beat("host0")
-            losses.append(loss)
-            if step % log_every == 0:
-                print(f"[train] step={step} loss={loss:.4f} "
-                      f"gnorm={float(metrics['grad_norm']):.3f} "
-                      f"lr={float(metrics['lr']):.2e} {dt * 1e3:.0f}ms")
-            if mgr and (step + 1) % ckpt_every == 0:
-                mgr.save_async(step + 1, {"params": params, "opt": opt})
+        try:
+            for step in range(start, steps):
+                if fail_at_step is not None and step == fail_at_step:
+                    raise RuntimeError(f"injected failure at step {step}")
+                t0 = time.perf_counter()
+                batch_arrs = pipe.get_batch(step)
+                params, opt, metrics = step_fn(params, opt, batch_arrs)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                coord.straggle.record("host0", dt)
+                coord.hb.beat("host0")
+                losses.append(loss)
+                if step % log_every == 0:
+                    print(f"[train] step={step} loss={loss:.4f} "
+                          f"gnorm={float(metrics['grad_norm']):.3f} "
+                          f"lr={float(metrics['lr']):.2e} {dt * 1e3:.0f}ms")
+                if mgr and (step + 1) % ckpt_every == 0:
+                    mgr.save_async(step + 1, {"params": params, "opt": opt})
+        finally:
+            # a training-step failure must not kill an in-flight async
+            # save: flush it so restart sees the last issued checkpoint
+            if mgr:
+                mgr.wait()
         if mgr:
-            mgr.wait()
             mgr.save(steps, {"params": params, "opt": opt})
     return losses
 

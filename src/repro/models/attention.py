@@ -155,6 +155,64 @@ def decode_attention(p, cfg, x, cache_k, cache_v, pos, *, kind: str = "attn",
     return proj, k, v
 
 
+def paged_attention(p, cfg, x, k_pool, v_pool, page_table, qpos, n_valid,
+                    *, kind: str = "attn", impl: str = "auto"):
+    """Attention against a paged KV pool (serving decode + chunked prefill).
+
+    x: (A, C, D) — A seats, each advancing by up to C tokens this call
+       (C=1 is plain decode; C>1 is one prefill chunk);
+    k_pool/v_pool: (P, page, KVH, hd) shared physical pages, page 0 is the
+       scratch page (writes from idle seats / chunk padding land there);
+    page_table: (A, n) int32 — seat a's logical page i lives in physical
+       page page_table[a, i] (dead entries 0);
+    qpos: (A, C) int32 absolute position of each token;
+    n_valid: (A,) int32 — how many of the C tokens are real.
+
+    impl: 'jnp' gathers pages and runs the dense oracle; 'pallas' streams
+    pages through the gather-over-page-table kernel (single-query global
+    decode only — chunked prefill and sliding-window layers always take
+    the jnp path); 'auto' = pallas on TPU, jnp elsewhere.
+
+    New K/V are scattered into the pool *before* the gather, so token t
+    attends to itself and everything earlier.  Returns
+    (out (A, C, D), new_k_pool, new_v_pool).
+    """
+    A, C, _ = x.shape
+    P, page = k_pool.shape[0], k_pool.shape[1]
+    n = page_table.shape[1]
+    q, k_new, v_new = _project_qkv(p, cfg, x, x, qpos, qpos)
+
+    valid_tok = jnp.arange(C, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    blk = jnp.clip(qpos // page, 0, n - 1)
+    phys = jnp.take_along_axis(page_table, blk, axis=1)          # (A, C)
+    phys = jnp.where(valid_tok, phys, 0)                         # -> scratch
+    off = jnp.where(valid_tok, qpos % page, 0)
+    k_pool = k_pool.at[phys, off].set(k_new)
+    v_pool = v_pool.at[phys, off].set(v_new)
+
+    hd = cfg.resolved_head_dim
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "pallas" and C == 1 and kind == "attn":
+        from repro.kernels.ops import paged_decode_attention
+        out = paged_decode_attention(q, k_pool, v_pool, page_table,
+                                     qpos[:, 0] + 1)
+    else:
+        k = k_pool[page_table].reshape(A, n * page, *k_pool.shape[2:])
+        v = v_pool[page_table].reshape(A, n * page, *v_pool.shape[2:])
+        kv_pos = jnp.broadcast_to(jnp.arange(n * page, dtype=jnp.int32),
+                                  (A, n * page))
+        keep = kv_pos[:, None, :] <= qpos[:, :, None]            # (A, C, T)
+        if kind == "attn_local" and cfg.sliding_window is not None:
+            keep &= kv_pos[:, None, :] > (qpos[:, :, None]
+                                          - cfg.sliding_window)
+        out = _gqa_attend(q, k, v, lambda qp, kp: keep, qpos, kv_pos,
+                          hd ** -0.5)
+    proj = jnp.einsum("bshd,hdD->bsD", _head_mask(cfg, out),
+                      p["wo"].astype(x.dtype))
+    return proj, k_pool, v_pool
+
+
 def ring_decode_attention(p, cfg, x, cache_k, cache_v, pos):
     """Sliding-window decode against a ring buffer of size W = sliding_window.
 

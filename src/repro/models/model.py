@@ -41,6 +41,8 @@ class RunOptions:
     scan_layers: bool = True
     mesh: Any = None                 # Mesh for shard_map regions (MoE); None on CPU
     moe_impl: str = "capacity"       # capacity (portable) | ragged (TPU gmm)
+    paged_attn_impl: str = "auto"    # auto (pallas on TPU, jnp elsewhere) |
+                                     # jnp | pallas — serving decode path
     grad_sync: str = "auto"          # auto (GSPMD) | compressed (int8 error-
                                      # feedback on the thin cross-pod hop)
     pipeline: bool = False           # GPipe PP: stages = the 'pod' axis
@@ -341,6 +343,82 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int,
     """Zero-initialized cache (smoke tests / serving)."""
     shapes, _ = cache_specs(cfg, batch, seq, opts)
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def paged_cache_supported(cfg: ModelConfig) -> bool:
+    """The paged layout covers pure-attention decoders (global and
+    sliding-window layers).  SSM state and encoder K/V are fixed-size per
+    request — nothing to page — so those archs stay on the slot engine."""
+    return (not cfg.encoder_decoder and cfg.frontend is None
+            and all(k in ("attn", "attn_local") for k in cfg.layer_kinds()))
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Zero paged KV pools: {posN: {k,v: (G, num_pages, page, KVH, hd)}}.
+
+    ``num_pages`` counts *physical* pages including the reserved scratch
+    page 0 (see runtime.paged_kv.BlockManager)."""
+    assert paged_cache_supported(cfg), cfg.name
+    period = cfg.scan_period()
+    g = cfg.num_layers // period
+    kvh, hd = cfg.padded_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.compute_dtype)
+    shape = (g, num_pages, page_size, kvh, hd)
+    return {f"pos{i}": {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+            for i in range(period)}
+
+
+def paged_decode_step(params, cfg: ModelConfig, cache, tokens, pos,
+                      page_table, n_valid, rules: LogicalRules,
+                      opts: RunOptions = RunOptions()):
+    """Advance every seat by up to C tokens against the paged KV pool.
+
+    tokens: (A, C) int32 (C=1: batched decode; C>1: one prefill chunk);
+    pos: (A,) int32 first position of each seat's chunk;
+    page_table: (A, n) int32 logical->physical page map;
+    n_valid: (A,) int32 valid tokens per seat (0 = idle seat; its writes
+    are routed to the scratch page and its logits are garbage).
+
+    Returns (logits (A, C, V) fp32, new_cache).
+    """
+    kinds = cfg.layer_kinds()
+    mlps = cfg.mlp_kinds()
+    dt = jnp.dtype(cfg.compute_dtype)
+    A, C = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = _constraint(x, rules, ("batch", None, None))
+    qpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+
+    def block(x, blk_and_cache):
+        blk, cac = blk_and_cache
+        new_cac = {}
+        for i, (kind, mlpk) in enumerate(zip(kinds, mlps)):
+            p = blk[f"pos{i}"]
+            c = cac[f"pos{i}"]
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            mix, nk, nv = attn_mod.paged_attention(
+                p["mixer"], cfg, h, c["k"], c["v"], page_table, qpos,
+                n_valid, kind=kind, impl=opts.paged_attn_impl)
+            x = x + mix
+            if mlpk == "moe":
+                hh = rms_norm(x, p["ln2"], cfg.norm_eps)
+                x = x + moe_mod.moe_block(p["moe"], cfg, hh, rules=rules,
+                                          mesh=opts.mesh,
+                                          xaxes=("batch", None, None),
+                                          impl=opts.moe_impl)
+            elif mlpk == "dense":
+                hh = rms_norm(x, p["ln2"], cfg.norm_eps)
+                x = x + swiglu(hh, p["mlp"]["wg"], p["mlp"]["wu"],
+                               p["mlp"]["wd"], x.dtype)
+            new_cac[f"pos{i}"] = {"k": nk, "v": nv}
+        return x, new_cac
+
+    x, new_cache = jax.lax.scan(
+        lambda carry, xs: block(carry, xs), x, (params["blocks"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        _output_weight(params, cfg).astype(x.dtype))
+    return logits.astype(jnp.float32), new_cache
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos,

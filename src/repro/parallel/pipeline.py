@@ -25,6 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import SHARD_MAP_PARTIAL_AUTO, shard_map
+from repro.parallel.sharding import SINGLE_DEVICE_RULES
+
 from repro.models import model as M
 from repro.models.modules import rms_norm, softmax_xent_chunked
 
@@ -43,9 +46,14 @@ def pp_loss_fn(cfg, mesh: Mesh, rules, opts, num_microbatches: int):
     'pod'.  params['blocks'] must be sharded over 'pod' on the group dim
     (rules override 'layers' -> 'pod' — see steps.build_cell)."""
     stages = mesh.shape["pod"]
-    inner_rules = rules.with_overrides(
-        batch=tuple(a for a in ("data",) if a in mesh.axis_names),
-        layers=None)
+    if SHARD_MAP_PARTIAL_AUTO:
+        inner_rules = rules.with_overrides(
+            batch=tuple(a for a in ("data",) if a in mesh.axis_names),
+            layers=None)
+    else:
+        # fully-manual region (0.4.x fallback): no GSPMD inside, so any
+        # constraint naming a mesh axis is illegal — drop them all
+        inner_rules = SINGLE_DEVICE_RULES
 
     def loss(params, batch):
         tokens, labels = batch["tokens"], batch["labels"]
@@ -95,8 +103,12 @@ def pp_loss_fn(cfg, mesh: Mesh, rules, opts, num_microbatches: int):
                 return (h_next, acc_loss + valid * total,
                         acc_cnt + valid * count), None
 
-            init = (jnp.zeros((mb, S, cfg.d_model), dt),
-                    jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+            # init must be TRACED zeros (derived from an input), not eager
+            # jnp.zeros: closed-over array constants get wrong sharding
+            # names in jax 0.4.x's shard_map transpose (_SpecError).
+            h0 = xs_pad[0].astype(dt) * 0
+            z0 = h0.reshape(-1)[0].astype(jnp.float32)
+            init = (h0, z0, z0)
             (_, tot, cnt), _ = jax.lax.scan(
                 tick, init,
                 (xs_pad, ys_pad, jnp.arange(ticks, dtype=jnp.int32)))
@@ -104,7 +116,7 @@ def pp_loss_fn(cfg, mesh: Mesh, rules, opts, num_microbatches: int):
             cnt = jax.lax.psum(cnt, "pod")
             return tot / jnp.maximum(cnt, 1.0)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             body, mesh=mesh, axis_names={"pod"},
             in_specs=(P("pod"), P(), P(), P()),
             out_specs=P(), check_vma=False)

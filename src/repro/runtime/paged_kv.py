@@ -1,0 +1,142 @@
+"""Paged KV-cache bookkeeping: block manager + serving metrics.
+
+The KV cache is a shared pool of fixed-size pages (``page_size`` tokens
+each).  A request's cache is whatever pages its page table names — pages
+are handed out by the :class:`BlockManager` and returned when the request
+completes, so short requests stop paying for the longest request's
+``max_len``.  Physical page 0 is *reserved scratch*: idle seats and
+chunk-padding tokens write there, live requests never own it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional
+
+
+class BlockManager:
+    """Allocator over physical KV pages 1..num_pages-1 (page 0 = scratch).
+
+    Invariants (exercised by tests/test_paged_kv.py):
+      - a page is owned by at most one live request at a time
+      - page 0 is never allocated
+      - ``free`` rejects pages that are not currently allocated
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 2, "need at least scratch + one usable page"
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._owner: Dict[int, int] = {}         # page -> rid
+        self.peak_in_use = 0
+
+    @property
+    def capacity(self) -> int:
+        """Usable pages (excludes the scratch page)."""
+        return self.num_pages - 1
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._owner)
+
+    def pages_needed(self, tokens: int) -> int:
+        return max(1, math.ceil(tokens / self.page_size))
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.available
+
+    def alloc(self, n: int, rid: int) -> Optional[List[int]]:
+        """Take ``n`` pages for request ``rid``; None if not enough free
+        (callers queue instead of crashing)."""
+        if not self.can_alloc(n):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for pg in pages:
+            self._owner[pg] = rid
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for pg in pages:
+            if pg not in self._owner:
+                raise ValueError(f"double free / foreign page {pg}")
+            del self._owner[pg]
+            self._free.append(pg)
+
+    def owner(self, page: int) -> Optional[int]:
+        return self._owner.get(page)
+
+    def utilization(self) -> float:
+        return self.in_use / max(self.capacity, 1)
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Counters the serving engine updates in place; ``snapshot`` derives
+    the headline serving numbers (TTFT, tokens/s, page utilization)."""
+    page_capacity: int = 0
+    submitted: int = 0
+    admitted: int = 0
+    completed: int = 0
+    ticks: int = 0
+    prefill_tokens: int = 0
+    first_tokens: int = 0        # one per completed prefill (the TTFT token)
+    decode_tokens: int = 0
+    pages_in_use: int = 0
+    peak_pages_in_use: int = 0
+    queued: int = 0
+    active: int = 0
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    _t_start: Optional[float] = None
+    _t_last: Optional[float] = None
+
+    def begin(self) -> None:
+        """Call at the START of the first tick so the throughput window
+        includes the first tick's work (jit compile, first prefill)."""
+        if self._t_start is None:
+            self._t_start = time.perf_counter()
+
+    def tick(self, *, queued: int, active: int, pages_in_use: int) -> None:
+        now = time.perf_counter()
+        if self._t_start is None:
+            self._t_start = now
+        self._t_last = now
+        self.ticks += 1
+        self.queued = queued
+        self.active = active
+        self.pages_in_use = pages_in_use
+        self.peak_pages_in_use = max(self.peak_pages_in_use, pages_in_use)
+
+    def snapshot(self) -> Dict[str, float]:
+        wall = ((self._t_last - self._t_start)
+                if self._t_start is not None and self._t_last is not None
+                else 0.0)
+        gen = self.decode_tokens + self.first_tokens
+        return {
+            "submitted": self.submitted,
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "queued": self.queued,
+            "active": self.active,
+            "ticks": self.ticks,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "generated_tokens": gen,
+            "page_capacity": self.page_capacity,
+            "pages_in_use": self.pages_in_use,
+            "peak_pages_in_use": self.peak_pages_in_use,
+            "page_utilization": self.pages_in_use / max(self.page_capacity, 1),
+            "peak_page_utilization":
+                self.peak_pages_in_use / max(self.page_capacity, 1),
+            "ttft_avg_s": (sum(self.ttft_s) / len(self.ttft_s)
+                           if self.ttft_s else 0.0),
+            "ttft_max_s": max(self.ttft_s) if self.ttft_s else 0.0,
+            "wall_s": wall,
+            "tokens_per_s": gen / wall if wall > 0 else 0.0,
+        }

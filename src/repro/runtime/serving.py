@@ -1,26 +1,41 @@
-"""Continuous-batching serving engine (vLLM-style, JAX-native).
+"""Continuous-batching serving engines (vLLM-style, JAX-native).
 
-The decode_32k / long_500k cells lower a single ``decode_step``; this
-module is the runtime that drives it in production fashion:
+Two engines share one request/queue model:
 
-  - a request queue; each request = (prompt tokens, max_new_tokens)
-  - a fixed pool of B cache slots (the decode batch); requests are admitted
-    into free slots as others finish (continuous batching — no head-of-line
-    blocking on the longest generation)
-  - per-slot prefill writes the prompt's KV into the slot's cache region;
-    decode steps advance ALL active slots together (one jitted call)
-  - greedy sampling; completion on max_new_tokens (or an optional eos id)
+:class:`PagedServingEngine` — the production path.  KV lives in a shared
+pool of fixed-size *pages* (``models.model.init_paged_cache``); each
+request owns only the pages its page table names, handed out by
+``runtime.paged_kv.BlockManager``.  Scheduling is continuous and
+preemption-free: a request is admitted the moment a seat and its full
+page budget (``ceil((prompt+max_new)/page_size)`` pages) are free — not
+when a whole ``max_len`` slot frees up — and long prompts prefill in
+chunks interleaved with everyone else's decode steps, so a 10k-token
+prompt does not stall the batch (bounded time-to-first-token for the
+short requests behind it).  Decode gathers K/V through the page table
+(``attention.paged_attention``; on TPU the global-attention decode step
+dispatches to the gather-over-page-table Pallas kernel in
+``kernels.decode_attention`` — ``RunOptions.paged_attn_impl`` selects
+jnp/pallas explicitly).
+Engine metrics (admitted/active/queued, page utilization, TTFT,
+tokens/s) accumulate in ``runtime.paged_kv.EngineMetrics``.
 
-Per-slot prefill is implemented by running the model's ``prefill`` on a
-single row and scattering the resulting K/V into the batched cache at the
-slot index — the same cache layout the dry-run decode cells shard.
+:class:`ServingEngine` — the dense fixed-slot reference: B cache slots of
+``max_len`` tokens each, whole-prompt prefill scattered into the slot.
+It wastes ``max_len - len`` tokens of KV per short request and cannot
+admit more than B requests, but its arithmetic is the equivalence oracle
+for the paged path (tests assert token-identical outputs) and it still
+serves the archs the paged layout does not cover (SSM state, encoder/
+decoder, vision frontends — fixed-size per-request state; nothing to
+page).
+
+Both engines greedy-sample and complete on max_new_tokens or eos.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +43,7 @@ import numpy as np
 
 from repro.models import model as M
 from repro.parallel.sharding import LogicalRules, SINGLE_DEVICE_RULES
+from repro.runtime.paged_kv import BlockManager, EngineMetrics
 
 
 @dataclasses.dataclass
@@ -38,7 +54,9 @@ class Request:
     eos_id: Optional[int] = None
     # filled by the engine:
     generated: List[int] = dataclasses.field(default_factory=list)
-    slot: Optional[int] = None
+    slot: Optional[int] = None      # seat index (paged) / cache slot (fixed)
+    pages: List[int] = dataclasses.field(default_factory=list)
+    prefill_pos: int = 0            # prompt tokens already prefilled (paged)
     done: bool = False
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
@@ -146,6 +164,190 @@ class ServingEngine:
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         t = 0
         while (self.queue or self.active) and t < max_ticks:
+            self.step()
+            t += 1
+        return self.finished
+
+
+class PagedServingEngine:
+    """Paged-KV continuous-batching engine (see module docstring).
+
+    Scheduling is deterministic (FCFS admission, lowest-rid prefill first,
+    seats scanned in index order) so trace tests can assert exact
+    interleavings.  ``trace`` records (tick, event, rid) tuples with
+    events: admit / prefill_chunk / first_token / decode / finish.
+    """
+
+    def __init__(self, cfg, params, *, page_size: int = 16,
+                 num_pages: int = 64, max_seats: int = 8,
+                 max_seq_len: int = 256, prefill_chunk: int = 32,
+                 rules: LogicalRules = SINGLE_DEVICE_RULES,
+                 opts: Optional[M.RunOptions] = None):
+        if not M.paged_cache_supported(cfg):
+            raise ValueError(
+                f"{cfg.name}: paged KV needs a pure-attention decoder; "
+                "use ServingEngine for ssm/enc-dec/frontend archs")
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_seats = max_seats
+        self.max_seq_len = max_seq_len
+        self.prefill_chunk = prefill_chunk
+        self.rules = rules
+        self.opts = opts or M.RunOptions(q_chunk=min(max_seq_len, 512))
+
+        self.bm = BlockManager(num_pages, page_size)
+        self.n_tables = max(1, -(-max_seq_len // page_size))
+        self.cache = M.init_paged_cache(cfg, num_pages, page_size)
+        self.page_table = np.zeros((max_seats, self.n_tables), np.int32)
+        self.pos = np.zeros((max_seats,), np.int32)     # next write position
+
+        self.seats: Dict[int, Request] = {}             # seat -> request
+        self.queue: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self.metrics = EngineMetrics(page_capacity=self.bm.capacity)
+        self.trace: List[Tuple[int, str, int]] = []
+        self._next_rid = 0
+        self._tick = 0
+
+        self._step_fn = jax.jit(
+            lambda p, c, t, q, pt, nv: M.paged_decode_step(
+                p, cfg, c, t, q, pt, nv, rules, self.opts))
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        total = len(prompt) + max_new_tokens
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        if total > self.max_seq_len:
+            raise ValueError(f"request needs {total} tokens > "
+                             f"max_seq_len={self.max_seq_len}")
+        if self.bm.pages_needed(total) > self.bm.capacity:
+            raise ValueError(f"request needs {self.bm.pages_needed(total)} "
+                             f"pages > pool capacity {self.bm.capacity}")
+        req = Request(self._next_rid, prompt, max_new_tokens, eos_id,
+                      t_submit=time.perf_counter())
+        self._next_rid += 1
+        self.queue.append(req)
+        self.metrics.submitted += 1
+        return req.rid
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _free_seats(self) -> List[int]:
+        return [s for s in range(self.max_seats) if s not in self.seats]
+
+    def _admit_from_queue(self):
+        """FCFS: admit while the head request's seat AND full page budget
+        are available (preemption-free — an admitted request can always
+        run to completion; shortfall queues, never crashes)."""
+        for seat in self._free_seats():
+            if not self.queue:
+                break
+            req = self.queue[0]
+            need = self.bm.pages_needed(len(req.prompt) + req.max_new_tokens)
+            pages = self.bm.alloc(need, req.rid)
+            if pages is None:
+                break
+            self.queue.popleft()
+            req.slot, req.pages = seat, pages
+            row = np.zeros((self.n_tables,), np.int32)
+            row[:len(pages)] = pages
+            self.page_table[seat] = row
+            self.pos[seat] = 0
+            self.seats[seat] = req
+            self.metrics.admitted += 1
+            self.trace.append((self._tick, "admit", req.rid))
+
+    def _prefill_tick(self):
+        """One prompt chunk for the oldest mid-prefill request (chunked
+        prefill: long prompts share the engine with everyone's decode)."""
+        cands = [r for r in self.seats.values()
+                 if r.prefill_pos < len(r.prompt)]
+        if not cands:
+            return
+        req = min(cands, key=lambda r: r.rid)
+        seat = req.slot
+        start = req.prefill_pos
+        chunk = req.prompt[start:start + self.prefill_chunk]
+        c = len(chunk)
+        tok = np.zeros((1, self.prefill_chunk), np.int32)
+        tok[0, :c] = chunk
+        logits, self.cache = self._step_fn(
+            self.params, self.cache, jnp.asarray(tok),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray(self.page_table[seat:seat + 1]),
+            jnp.asarray([c], jnp.int32))
+        req.prefill_pos += c
+        self.metrics.prefill_tokens += c
+        self.trace.append((self._tick, "prefill_chunk", req.rid))
+        if req.prefill_pos == len(req.prompt):
+            first = int(jnp.argmax(logits[0, c - 1]))
+            req.generated.append(first)
+            req.t_first_token = time.perf_counter()
+            self.metrics.ttft_s.append(req.t_first_token - req.t_submit)
+            self.metrics.first_tokens += 1
+            self.pos[seat] = len(req.prompt)
+            self.trace.append((self._tick, "first_token", req.rid))
+            hit_eos = req.eos_id is not None and first == req.eos_id
+            if req.max_new_tokens <= 1 or hit_eos:
+                self._finish(req)
+
+    def _finish(self, req: Request):
+        seat = req.slot
+        req.done = True
+        req.t_done = time.perf_counter()
+        self.bm.free(req.pages)
+        self.page_table[seat] = 0
+        self.pos[seat] = 0
+        del self.seats[seat]
+        self.finished.append(req)
+        self.metrics.completed += 1
+        self.trace.append((self._tick, "finish", req.rid))
+
+    def _decode_tick(self):
+        """One token for every seat whose prefill is complete."""
+        decoding = [s for s, r in self.seats.items()
+                    if r.prefill_pos >= len(r.prompt)]
+        if not decoding:
+            return
+        tok = np.zeros((self.max_seats, 1), np.int32)
+        nv = np.zeros((self.max_seats,), np.int32)
+        for s in decoding:
+            tok[s, 0] = self.seats[s].generated[-1]
+            nv[s] = 1
+        logits, self.cache = self._step_fn(
+            self.params, self.cache, jnp.asarray(tok),
+            jnp.asarray(self.pos), jnp.asarray(self.page_table),
+            jnp.asarray(nv))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        for s in decoding:
+            req = self.seats[s]
+            req.generated.append(int(nxt[s]))
+            self.pos[s] += 1
+            self.metrics.decode_tokens += 1
+            self.trace.append((self._tick, "decode", req.rid))
+            hit_eos = req.eos_id is not None and nxt[s] == req.eos_id
+            if len(req.generated) >= req.max_new_tokens or hit_eos:
+                self._finish(req)
+
+    # -- one engine tick -----------------------------------------------------
+
+    def step(self):
+        self.metrics.begin()
+        self._tick += 1
+        self._admit_from_queue()
+        self._prefill_tick()
+        self._decode_tick()
+        self.metrics.tick(queued=len(self.queue), active=len(self.seats),
+                          pages_in_use=self.bm.in_use)
+
+    def run(self, max_ticks: int = 100_000) -> List[Request]:
+        t = 0
+        while (self.queue or self.seats) and t < max_ticks:
             self.step()
             t += 1
         return self.finished

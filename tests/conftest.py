@@ -9,3 +9,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    # Tier-1 runs everything; `-m "not slow"` (scripts/run_tests.sh FAST=1)
+    # keeps the quick inner loop for contributors.
+    config.addinivalue_line(
+        "markers", "slow: long-running test (minutes-scale model loops)")
+    config.addinivalue_line(
+        "markers",
+        "multidevice: spawns XLA_FLAGS multi-device subprocesses")

@@ -6,7 +6,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 import jax
-from jax.sharding import AxisType
+from repro.launch.mesh import _make_mesh
 from repro.configs import get_config, reduced_config
 from repro.configs.base import ShapeConfig
 from repro.launch.steps import build_cell
@@ -16,8 +16,7 @@ from repro.data.pipeline import TokenPipeline
 
 cfg = reduced_config(get_config("llama3-8b"))
 shape = ShapeConfig("t", 32, 8, "train")
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+mesh = _make_mesh((2, 2, 2), ("pod", "data", "model"))
 pipe = TokenPipeline(cfg.vocab_size, 32, 8)
 batches = [pipe.get_batch(i) for i in range(3)]
 

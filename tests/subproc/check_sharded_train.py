@@ -17,8 +17,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
-
+from repro.launch.mesh import _make_mesh
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, reduced_config
 from repro.configs.base import ShapeConfig
@@ -32,8 +31,7 @@ cfg = reduced_config(get_config("qwen2-moe-a2.7b"))
 shape = ShapeConfig("t", 32, 8, "train")
 opts = M.RunOptions(q_chunk=16, xent_chunk=16)
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+mesh = _make_mesh((2, 2, 2), ("pod", "data", "model"))
 cell = build_cell(cfg, shape, mesh, opts=opts)
 step_fn = jax.jit(cell.fn, in_shardings=cell.in_shardings)
 

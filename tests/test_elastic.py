@@ -1,6 +1,6 @@
 """Fault-tolerance unit + property tests: heartbeats, stragglers, remesh."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.runtime.elastic import (ElasticCoordinator, HeartbeatMonitor,
                                    StragglerDetector, plan_remesh)

@@ -14,7 +14,11 @@ def make_cfg(E=6, k=2, shared=0):
     return ModelConfig(
         name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
         num_kv_heads=2, d_ff=32, vocab_size=64, head_dim=8,
+        # capacity_factor = num_experts => no capacity drops: these tests
+        # assert exactness vs the naive loop (same convention as
+        # configs.reduced_config; production keeps 1.25)
         moe=MoEConfig(num_experts=E, top_k=k, d_ff_expert=24,
+                      capacity_factor=float(E),
                       num_shared_experts=shared, d_ff_shared=32 if shared else 0))
 
 

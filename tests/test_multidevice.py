@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = [pytest.mark.multidevice, pytest.mark.slow]
+
 HERE = os.path.dirname(__file__)
 
 

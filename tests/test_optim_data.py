@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.pipeline import TokenPipeline, _tokens_for_slice
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, global_norm

@@ -2,7 +2,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.parallel.sharding import (DEFAULT_RULES, LogicalRules,
