@@ -1,22 +1,34 @@
-"""Serving benchmark: paged-KV engine vs fixed-slot engine, equal KV budget.
+"""Serving benchmark: paged vs fixed-slot engines, and prefix caching
+on vs off, at equal KV budget.  Emits machine-readable BENCH_serving.json.
 
-Both engines get the SAME KV memory budget (in cache tokens) and the same
-skewed request stream (mostly short requests, a tail of long ones — the
-distribution that hurts fixed slots most: every slot is provisioned for
-the longest request, so short requests strand most of their slot).
+Workload 1 (skewed): both engines get the SAME KV memory budget (in
+cache tokens) and the same skewed request stream (mostly short requests,
+a tail of long ones — the distribution that hurts fixed slots most:
+every slot is provisioned for the longest request, so short requests
+strand most of their slot).
 
   fixed : slots = budget // max_len          (max_len fits the longest)
   paged : pages = budget // page_size        (each request holds only
                                               ceil(len/page_size) pages)
 
-Prints ``name,tokens_per_s,detail`` CSV rows plus the paged/fixed
-throughput ratio.  Run:
+Workload 2 (shared prefix): every request starts with the same long
+system-prompt prefix plus a short unique suffix — the dominant shape in
+real single-tenant LLM traffic.  The paged engine runs twice at the SAME
+page budget, prefix caching off vs on; with caching, later requests
+point their leading page-table entries at the already-cached prefix
+pages (refcount++) and skip prefilling them, so TTFT and aggregate
+tokens/s improve while outputs stay token-identical.
+
+Prints ``name,tokens_per_s,detail`` CSV rows plus ratio lines, and
+writes tokens/s, TTFT, page utilization and prefix-hit rate for every
+engine run to ``--json-out`` (default BENCH_serving.json).  Run:
 
   PYTHONPATH=src python -m benchmarks.serving_paged [--requests 16]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -44,6 +56,21 @@ def make_workload(n: int, *, seed: int = 0, short_frac: float = 0.75,
     return reqs
 
 
+def make_shared_prefix_workload(n: int, *, prefix_len: int = 64,
+                                suffix_max: int = 8, gen: int = 8,
+                                seed: int = 0):
+    """One shared system-prompt prefix + short unique suffixes."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, 250, prefix_len).astype(np.int32)
+    reqs = []
+    for _ in range(n):
+        slen = int(rng.integers(1, suffix_max + 1))
+        suffix = rng.integers(0, 250, slen).astype(np.int32)
+        reqs.append((np.concatenate([prefix, suffix]),
+                     int(rng.integers(max(2, gen - 2), gen + 1))))
+    return prefix, reqs
+
+
 def run_engine(eng, reqs):
     for toks, gen in reqs:
         eng.submit(toks, max_new_tokens=gen)
@@ -55,22 +82,28 @@ def run_engine(eng, reqs):
             "tokens_per_s": toks / max(wall, 1e-9)}
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--budget-tokens", type=int, default=384,
-                    help="KV cache budget shared by both engines")
-    ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=96)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def engine_record(name, run, metrics=None):
+    rec = {"name": name, "tokens_per_s": run["tokens_per_s"],
+           "tokens": run["tokens"], "wall_s": run["wall_s"],
+           "requests": run["requests"]}
+    if metrics is not None:
+        rec.update({
+            "ttft_avg_s": metrics["ttft_avg_s"],
+            "ttft_max_s": metrics["ttft_max_s"],
+            "peak_page_utilization": metrics["peak_page_utilization"],
+            "kv_occupancy": metrics["kv_occupancy"],
+            "prefix_hit_rate": metrics["prefix_hit_rate"],
+            "prefill_tokens": metrics["prefill_tokens"],
+            "cached_prompt_tokens": metrics["cached_prompt_tokens"],
+            "cached_pages": metrics["cached_pages"],
+            "evictions": metrics["evictions"],
+            "ticks": metrics["ticks"],
+        })
+    return rec
 
-    cfg = reduced_config(get_config(args.arch))
-    params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(0),
-                           dtype=jnp.float32)
-    reqs = make_workload(args.requests, seed=args.seed,
-                         max_len=args.max_len)
+
+def bench_skewed(cfg, params, args):
+    reqs = make_workload(args.requests, seed=args.seed, max_len=args.max_len)
     n_short = sum(1 for t, g in reqs if len(t) + g <= 32)
     print(f"# workload: {len(reqs)} requests ({n_short} short), "
           f"budget={args.budget_tokens} KV tokens")
@@ -98,6 +131,115 @@ def main():
     ratio = rp["tokens_per_s"] / max(rf["tokens_per_s"], 1e-9)
     print(f"speedup,{ratio:.2f},paged_vs_fixed_tokens_per_s")
     assert rp["tokens"] == rf["tokens"], "engines generated different counts"
+    return {"fixed": engine_record("fixed_slot", rf),
+            "paged": engine_record("paged", rp, m),
+            "tokens_per_s_ratio": ratio}
+
+
+def bench_shared_prefix(cfg, params, args):
+    """Prefix caching on vs off on the paged engine, equal page budget.
+
+    The cache is warmed with one request carrying the shared prefix
+    (steady-state serving: the system prompt is resident from earlier
+    traffic), then the measured stream runs.  Both configurations process
+    the identical warmup + stream."""
+    prefix, reqs = make_shared_prefix_workload(
+        args.prefix_requests, prefix_len=args.prefix_len, seed=args.seed)
+    max_seq = args.prefix_len + 8 + 10
+    num_pages = args.prefix_budget_tokens // args.page_size + 1
+
+    results, outputs = {}, {}
+    for cached in (False, True):
+        eng = PagedServingEngine(
+            cfg, params, page_size=args.page_size, num_pages=num_pages,
+            max_seats=args.prefix_requests, max_seq_len=max_seq,
+            prefill_chunk=args.page_size, prefix_cache=cached)
+        warm = np.concatenate([prefix, np.asarray([1], np.int32)])
+        eng.submit(warm, max_new_tokens=2)
+        eng.run()
+        warm_m = eng.metrics.snapshot()         # exclude warmup (jit compile,
+        warm_n = len(eng.finished)              # full prefix prefill) below
+
+        for toks, gen in reqs:
+            eng.submit(toks, max_new_tokens=gen)
+        t0 = time.perf_counter()
+        done = eng.run()[warm_n:]
+        wall = time.perf_counter() - t0
+        m = eng.metrics.snapshot()
+        ttfts = [q.t_first_token - q.t_submit for q in done]
+        toks = sum(len(q.generated) for q in done)
+        prefill = m["prefill_tokens"] - warm_m["prefill_tokens"]
+        cached_toks = (m["cached_prompt_tokens"]
+                       - warm_m["cached_prompt_tokens"])
+        rec = {
+            "name": f"paged_prefix_{'cache' if cached else 'nocache'}",
+            "tokens_per_s": toks / max(wall, 1e-9),
+            "tokens": toks, "wall_s": wall, "requests": len(done),
+            "ttft_avg_s": sum(ttfts) / len(ttfts),
+            "ttft_max_s": max(ttfts),
+            "peak_page_utilization": m["peak_page_utilization"],
+            "kv_occupancy": m["kv_occupancy"],
+            "prefix_hit_rate": cached_toks / max(prefill + cached_toks, 1),
+            "prefill_tokens": prefill,
+            "cached_prompt_tokens": cached_toks,
+            "cached_pages": m["cached_pages"],
+            "evictions": m["evictions"] - warm_m["evictions"],
+            "ticks": m["ticks"] - warm_m["ticks"],
+        }
+        key = "cache" if cached else "nocache"
+        results[key] = rec
+        outputs[key] = [q.generated for q in sorted(done, key=lambda q: q.rid)]
+        print(f"{rec['name']}[{num_pages - 1}x{args.page_size}],"
+              f"{rec['tokens_per_s']:.2f},"
+              f"tokens={rec['tokens']};wall_s={rec['wall_s']:.2f};"
+              f"ttft_avg_s={rec['ttft_avg_s']:.4f};"
+              f"prefix_hit_rate={rec['prefix_hit_rate']:.2f};"
+              f"peak_page_util={rec['peak_page_utilization']:.2f}")
+
+    assert outputs["cache"] == outputs["nocache"], \
+        "prefix caching changed the generated tokens"
+    tps = results["cache"]["tokens_per_s"] / \
+        max(results["nocache"]["tokens_per_s"], 1e-9)
+    ttft = results["nocache"]["ttft_avg_s"] / \
+        max(results["cache"]["ttft_avg_s"], 1e-9)
+    print(f"speedup,{tps:.2f},prefix_cache_vs_nocache_tokens_per_s")
+    print(f"speedup,{ttft:.2f},prefix_cache_vs_nocache_ttft")
+    return {"nocache": results["nocache"], "cache": results["cache"],
+            "tokens_per_s_ratio": tps, "ttft_ratio": ttft,
+            "token_identical": True}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--budget-tokens", type=int, default=384,
+                    help="KV cache budget shared by both engines (skewed)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefix-requests", type=int, default=12)
+    ap.add_argument("--prefix-len", type=int, default=64,
+                    help="shared system-prompt length (shared-prefix bench)")
+    ap.add_argument("--prefix-budget-tokens", type=int, default=384,
+                    help="KV budget for the shared-prefix comparison")
+    ap.add_argument("--json-out", default="BENCH_serving.json")
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch))
+    params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(0),
+                           dtype=jnp.float32)
+
+    skewed = bench_skewed(cfg, params, args)
+    shared = bench_shared_prefix(cfg, params, args)
+
+    out = {"arch": args.arch, "seed": args.seed,
+           "budget_tokens": args.budget_tokens,
+           "page_size": args.page_size,
+           "skewed": skewed, "shared_prefix": shared}
+    with open(args.json_out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {args.json_out}")
 
 
 if __name__ == "__main__":

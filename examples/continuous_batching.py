@@ -2,7 +2,13 @@
 flows through a fixed pool of KV-cache slots; slots are re-admitted as
 requests finish (no head-of-line blocking on the longest generation).
 
-  PYTHONPATH=src python examples/continuous_batching.py --arch qwen3-1.7b
+The fixed-slot engine runs through the same unified ``Scheduler`` and
+shared sampler as the paged engine, so the sampling flags behave
+identically here (default greedy; ``--temperature`` > 0 draws from the
+per-request deterministic stream).
+
+  PYTHONPATH=src python examples/continuous_batching.py --arch qwen3-1.7b \
+      --temperature 0.8 --top-p 0.9 --seed 7
 """
 import argparse
 import time
@@ -11,6 +17,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced_config
+from repro.launch.serve import add_sampling_args, sampling_from_args
 from repro.models import model as M
 from repro.runtime.serving import ServingEngine
 
@@ -20,7 +27,9 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=10)
+    add_sampling_args(ap)
     args = ap.parse_args()
+    sampling = sampling_from_args(args)
 
     cfg = reduced_config(get_config(args.arch))
     params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
@@ -32,7 +41,7 @@ def main():
         plen = int(rng.integers(4, 24))
         gen = int(rng.integers(4, 20))
         eng.submit(rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-                   max_new_tokens=gen)
+                   max_new_tokens=gen, eos_id=args.eos_id, sampling=sampling)
     done = eng.run()
     wall = time.perf_counter() - t0
 

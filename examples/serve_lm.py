@@ -3,15 +3,19 @@
 ``--engine batch`` prefills a batch of equal-length prompts and decodes
 them in lockstep; ``--engine paged`` streams mixed-length requests
 through the paged-KV engine (shared page pool, chunked prefill,
-continuous admission) and prints its serving metrics.
+continuous admission, refcounted prefix caching) and prints its serving
+metrics.  Sampling flags (``--temperature/--top-k/--top-p/--seed``) and
+``--eos-id`` flow through the shared ``runtime.sampler`` on both paths;
+the default is greedy.
 
   PYTHONPATH=src python examples/serve_lm.py --arch gemma3-12b --gen 24
   PYTHONPATH=src python examples/serve_lm.py --engine paged \
-      --arch qwen3-1.7b --requests 8
+      --arch qwen3-1.7b --requests 8 --temperature 0.7 --top-k 40
 """
 import argparse
 
-from repro.launch.serve import serve, serve_paged
+from repro.launch.serve import (add_sampling_args, sampling_from_args,
+                                serve, serve_paged)
 
 
 def main():
@@ -24,9 +28,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prefix-cache page sharing (paged engine)")
+    add_sampling_args(ap)
     args = ap.parse_args()
+    sampling = sampling_from_args(args)
     if args.engine == "paged":
-        r = serve_paged(args.arch, requests=args.requests, gen=args.gen)
+        r = serve_paged(args.arch, requests=args.requests, gen=args.gen,
+                        seed=args.seed, eos_id=args.eos_id, sampling=sampling,
+                        prefix_cache=not args.no_prefix_cache)
         m = r["metrics"]
         print(f"served:  {m['completed']:.0f} requests, "
               f"{m['generated_tokens']:.0f} tokens "
@@ -35,12 +45,13 @@ def main():
               f"max {m['ttft_max_s'] * 1e3:.0f} ms")
         print(f"pages:   peak {m['peak_pages_in_use']:.0f}/"
               f"{m['page_capacity']:.0f} "
-              f"(util {m['peak_page_utilization']:.2f})")
+              f"(util {m['peak_page_utilization']:.2f}, "
+              f"prefix hits {m['prefix_hit_rate']:.2f})")
         for req in r["finished"][:4]:
             print(f"  request[{req.rid}] -> {req.generated}")
         return
     r = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-              gen=args.gen)
+              gen=args.gen, seed=args.seed, sampling=sampling)
     print(f"prefill: {r['prefill_s'] * 1e3:.0f} ms")
     print(f"decode:  {r['decode_s'] * 1e3:.0f} ms "
           f"({r['tokens_per_s']:.1f} tok/s)")

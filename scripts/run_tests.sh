@@ -11,4 +11,4 @@ extra=()
 if [[ "${FAST:-0}" == "1" ]]; then
   extra+=(-m "not slow and not multidevice")
 fi
-exec python -m pytest -x -q "${extra[@]}" "$@"
+exec python -m pytest -x -q ${extra[@]+"${extra[@]}"} "$@"

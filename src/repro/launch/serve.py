@@ -4,18 +4,26 @@
 in one shot, then lockstep decode (the decode_32k / long_500k dry-run
 cells lower the same ``decode_step``).  ``serve_paged`` drives the
 paged-KV continuous-batching engine (``runtime.serving.PagedServing
-Engine``) over a mixed-length request stream and reports engine metrics
-(TTFT, tokens/s, page utilization).
+Engine`` — unified scheduler + refcounted prefix caching) over a
+mixed-length request stream and reports engine metrics (TTFT, tokens/s,
+page utilization, prefix-hit rate).
+
+Both paths sample through ``runtime.sampler``: ``--temperature 0`` (the
+default) is exact greedy argmax; ``--temperature/--top-k/--top-p/--seed``
+select stochastic sampling, deterministic per (seed, request, step).
+``--eos-id`` stops engine requests early (static batch decodes lockstep
+and ignores it).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
       --batch 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --engine paged \
-      --arch qwen3-1.7b --requests 8 --gen 16
+      --arch qwen3-1.7b --requests 8 --gen 16 --temperature 0.8 --top-p 0.95
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,11 +33,13 @@ from repro.configs import get_config, reduced_config, make_example_batch
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.parallel.sharding import rules_for_mesh, DEFAULT_RULES
+from repro.runtime.sampler import Sampler, SamplingParams
 from repro.runtime.serving import PagedServingEngine
 
 
 def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
-          reduced: bool = True, greedy: bool = True, seed: int = 0):
+          reduced: bool = True, seed: int = 0,
+          sampling: Optional[SamplingParams] = None):
     cfg = get_config(arch)
     if reduced:
         cfg = reduced_config(cfg)
@@ -46,6 +56,16 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
     prefill_fn = jax.jit(lambda p, b: M.prefill(p, cfg, b, rules, opts))
     decode_fn = jax.jit(lambda p, c, t, q: M.decode_step(p, cfg, c, t, q,
                                                          rules, opts))
+    sampler = Sampler()
+
+    def pick(logits_last, step):
+        """logits_last: (B, V) -> (B, 1) int32 via the shared sampler."""
+        if sampling is None or sampling.greedy:
+            return jnp.argmax(logits_last, axis=-1).astype(jnp.int32)[:, None]
+        rows = np.asarray(logits_last)
+        toks = [sampler.sample(rows[b], sampling, rid=b, step=step)
+                for b in range(rows.shape[0])]
+        return jnp.asarray(toks, jnp.int32)[:, None]
 
     t0 = time.perf_counter()
     logits, cache = prefill_fn(params, req)
@@ -62,13 +82,13 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
     cache = {pos: grow(ent) for pos, ent in cache.items()}
     t_prefill = time.perf_counter() - t0
 
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    tok = pick(logits[:, -1], 0)
     out_tokens = [tok]
     t0 = time.perf_counter()
     for i in range(gen - 1):
         pos = jnp.full((batch,), prompt_len + i, jnp.int32)
         logits, cache = decode_fn(params, cache, tok, pos)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        tok = pick(logits[:, -1], i + 1)
         out_tokens.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t0
@@ -85,7 +105,10 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
 def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
                 page_size: int = 16, num_pages: int = 128,
                 max_seats: int = 8, prefill_chunk: int = 32,
-                reduced: bool = True, seed: int = 0):
+                reduced: bool = True, seed: int = 0,
+                eos_id: Optional[int] = None,
+                sampling: Optional[SamplingParams] = None,
+                prefix_cache: bool = True):
     """Drive the paged engine over a mixed-length request stream."""
     cfg = get_config(arch)
     if reduced:
@@ -95,14 +118,33 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
     eng = PagedServingEngine(cfg, params, page_size=page_size,
                              num_pages=num_pages, max_seats=max_seats,
                              max_seq_len=3 * page_size + gen,
-                             prefill_chunk=prefill_chunk)
+                             prefill_chunk=prefill_chunk,
+                             prefix_cache=prefix_cache)
     rng = np.random.default_rng(seed)
     for _ in range(requests):
         plen = int(rng.integers(4, 3 * page_size))
         eng.submit(rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-                   max_new_tokens=int(rng.integers(2, gen + 1)))
+                   max_new_tokens=int(rng.integers(2, gen + 1)),
+                   eos_id=eos_id, sampling=sampling)
     done = eng.run()
     return {"finished": done, "metrics": eng.metrics.snapshot()}
+
+
+def add_sampling_args(ap: argparse.ArgumentParser) -> None:
+    """Shared CLI sampling/termination flags (also used by examples)."""
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a request early on this token id")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy argmax (default)")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = off")
+    ap.add_argument("--top-p", type=float, default=1.0, help="1.0 = off")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed for params init and sampling streams")
+
+
+def sampling_from_args(args) -> SamplingParams:
+    return SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                          top_p=args.top_p, seed=args.seed)
 
 
 def main():
@@ -115,21 +157,28 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=128)
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prefix-cache page sharing (paged engine)")
+    add_sampling_args(ap)
     args = ap.parse_args()
+    sampling = sampling_from_args(args)
     if args.engine == "paged":
         r = serve_paged(args.arch, requests=args.requests, gen=args.gen,
-                        page_size=args.page_size, num_pages=args.num_pages)
+                        page_size=args.page_size, num_pages=args.num_pages,
+                        seed=args.seed, eos_id=args.eos_id, sampling=sampling,
+                        prefix_cache=not args.no_prefix_cache)
         m = r["metrics"]
         print(f"[serve.paged] {m['completed']:.0f} requests "
               f"{m['generated_tokens']:.0f} tokens in {m['wall_s'] * 1e3:.0f}ms "
               f"({m['tokens_per_s']:.1f} tok/s) "
               f"ttft_avg={m['ttft_avg_s'] * 1e3:.0f}ms "
-              f"peak_page_util={m['peak_page_utilization']:.2f}")
+              f"peak_page_util={m['peak_page_utilization']:.2f} "
+              f"prefix_hit_rate={m['prefix_hit_rate']:.2f}")
         print("[serve.paged] sample tokens:",
               r["finished"][0].generated[:12])
         return
     r = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-              gen=args.gen)
+              gen=args.gen, seed=args.seed, sampling=sampling)
     print(f"[serve] prefill={r['prefill_s'] * 1e3:.0f}ms "
           f"decode={r['decode_s'] * 1e3:.0f}ms "
           f"throughput={r['tokens_per_s']:.1f} tok/s")

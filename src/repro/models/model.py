@@ -368,6 +368,16 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
             for i in range(period)}
 
 
+def copy_paged_page(cache, src, dst):
+    """Copy physical page ``src`` onto page ``dst`` in every K/V pool of a
+    paged cache (prefix-cache copy-on-write: a request that shares only
+    part of a cached page gets its own copy to write its tail into).
+
+    ``src``/``dst`` may be traced scalars; jit-compatible.
+    """
+    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), cache)
+
+
 def paged_decode_step(params, cfg: ModelConfig, cache, tokens, pos,
                       page_table, n_valid, rules: LogicalRules,
                       opts: RunOptions = RunOptions()):

@@ -1,36 +1,107 @@
-"""Paged KV-cache bookkeeping: block manager + serving metrics.
+"""Paged KV-cache bookkeeping: refcounted block manager + serving metrics.
 
 The KV cache is a shared pool of fixed-size pages (``page_size`` tokens
 each).  A request's cache is whatever pages its page table names — pages
-are handed out by the :class:`BlockManager` and returned when the request
+are handed out by the :class:`BlockManager` and released when the request
 completes, so short requests stop paying for the longest request's
 ``max_len``.  Physical page 0 is *reserved scratch*: idle seats and
 chunk-padding tokens write there, live requests never own it.
+
+Pages are refcounted so shared prompt prefixes are free: the serving
+engine registers every page that fills with prompt tokens in an
+exact-token *prefix index*; a later request whose prompt starts with the
+same page-aligned token run points its leading page-table entries at
+those physical pages (``acquire`` → refcount++) instead of re-prefilling
+them, and copy-on-writes only the last partially matching page.
+
+Page lifecycle::
+
+    free ──alloc(ref=1)──► live ──acquire──► shared (ref+=1)
+      ▲                      │ release (ref-=1) ... ref==0:
+      │                      ├─ registered in prefix index ─► reclaimable
+      └──────────────────────┴─ unregistered ────────────────┘   (LRU)
+
+    reclaimable ──prefix hit (acquire)──► live again, content intact
+    reclaimable ──alloc under pressure──► evicted + unregistered
+
+Only *full* prompt pages are ever registered, and full pages are never
+written again (all writes are positional), so a reclaimable page's
+content is immutable and a prefix hit can revive it as-is.
+
+Known scale limit: the index keys chains by their full parent-token
+tuple (exactness over compactness), so one cached L-token chain holds
+O(L^2 / page_size) ints of bookkeeping.  Fine for the prompt lengths
+this repo serves today; re-keying children by parent page id (with
+subtree invalidation on eviction) is the planned fix for multi-k-token
+system prompts — see ROADMAP "Serving".
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+
+TokenTuple = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """Result of :meth:`BlockManager.match_prefix`.
+
+    pages: physical pages holding the matched *full* page-aligned prefix
+        (not yet acquired — the caller takes the refs).
+    cow_src: physical page whose leading ``n_cached - len(pages)*page``
+        tokens extend the match; the caller copies it (copy-on-write)
+        rather than sharing, because it will write its own tokens into
+        the remainder of that page.  None when no partial match.
+    n_cached: total prompt tokens covered (always < len(prompt): the
+        final prompt token is recomputed so admission has logits to
+        sample the first output token from).
+    """
+    pages: List[int]
+    cow_src: Optional[int]
+    n_cached: int
 
 
 class BlockManager:
-    """Allocator over physical KV pages 1..num_pages-1 (page 0 = scratch).
+    """Refcounted allocator over physical KV pages 1..num_pages-1
+    (page 0 = scratch) with an exact-token prefix index.
 
-    Invariants (exercised by tests/test_paged_kv.py):
-      - a page is owned by at most one live request at a time
-      - page 0 is never allocated
-      - ``free`` rejects pages that are not currently allocated
+    Invariants (exercised by tests/test_paged_kv.py and
+    tests/test_prefix_cache.py):
+      - every usable page is in exactly one of {live (ref > 0), free,
+        reclaimable}; page 0 is never handed out
+      - ``free``/``release`` of a page whose refcount is already 0
+        raises (double-free protection)
+      - a page's refcount equals the number of live requests whose page
+        tables name it
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *,
+                 prefix_cache: bool = True):
         assert num_pages >= 2, "need at least scratch + one usable page"
         self.num_pages = num_pages
         self.page_size = page_size
+        self.prefix_cache = prefix_cache
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
-        self._owner: Dict[int, int] = {}         # page -> rid
+        self._ref: Dict[int, int] = {}           # page -> live refcount
+        # debugging aid only: SOME current holder (the allocating/reviving
+        # rid — NOT updated by acquire-for-sharing, dropped at refcount 0)
+        self._owner: Dict[int, int] = {}
+        self._reclaim: "OrderedDict[int, None]" = OrderedDict()  # LRU order
+        # prefix index: parent prefix tokens -> {page's tokens -> page}
+        self._children: Dict[TokenTuple, Dict[TokenTuple, int]] = {}
+        self._page_key: Dict[int, Tuple[TokenTuple, TokenTuple]] = {}
         self.peak_in_use = 0
+        self.evictions = 0
+        # bumped on any state change that could alter a future alloc or
+        # match — admission caches its failed attempt against this
+        self.version = 0
+
+    # -- accounting -----------------------------------------------------------
 
     @property
     def capacity(self) -> int:
@@ -39,11 +110,21 @@ class BlockManager:
 
     @property
     def available(self) -> int:
-        return len(self._free)
+        """Pages an ``alloc`` can hand out: free + reclaimable cached."""
+        return len(self._free) + len(self._reclaim)
 
     @property
     def in_use(self) -> int:
-        return len(self._owner)
+        """Pages referenced by at least one live request."""
+        return len(self._ref)
+
+    @property
+    def cached(self) -> int:
+        """Reclaimable pages kept only for their cached prefix content."""
+        return len(self._reclaim)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def pages_needed(self, tokens: int) -> int:
         return max(1, math.ceil(tokens / self.page_size))
@@ -51,45 +132,150 @@ class BlockManager:
     def can_alloc(self, n: int) -> bool:
         return n <= self.available
 
-    def alloc(self, n: int, rid: int) -> Optional[List[int]]:
-        """Take ``n`` pages for request ``rid``; None if not enough free
-        (callers queue instead of crashing)."""
-        if not self.can_alloc(n):
-            return None
-        pages = [self._free.pop() for _ in range(n)]
-        for pg in pages:
-            self._owner[pg] = rid
-        self.peak_in_use = max(self.peak_in_use, self.in_use)
-        return pages
-
-    def free(self, pages: List[int]) -> None:
-        for pg in pages:
-            if pg not in self._owner:
-                raise ValueError(f"double free / foreign page {pg}")
-            del self._owner[pg]
-            self._free.append(pg)
-
     def owner(self, page: int) -> Optional[int]:
+        """One current holder of ``page`` (debugging aid): the rid that
+        alloc'd or revived it.  Shared pages have more holders than this
+        reports — use :meth:`refcount` for sharing questions."""
         return self._owner.get(page)
 
     def utilization(self) -> float:
         return self.in_use / max(self.capacity, 1)
 
+    # -- alloc / share / release ----------------------------------------------
+
+    def alloc(self, n: int, rid: int) -> Optional[List[int]]:
+        """Take ``n`` fresh pages (refcount 1) for request ``rid``; evicts
+        LRU reclaimable cached pages under pressure.  None if not enough
+        (callers queue instead of crashing)."""
+        if not self.can_alloc(n):
+            return None
+        pages = []
+        for _ in range(n):
+            if self._free:
+                pg = self._free.pop()
+            else:
+                pg, _ = self._reclaim.popitem(last=False)   # LRU victim
+                self._unregister(pg)
+                self.evictions += 1
+            pages.append(pg)
+        for pg in pages:
+            self._ref[pg] = 1
+            self._owner[pg] = rid
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self.version += 1
+        return pages
+
+    def acquire(self, page: int, rid: Optional[int] = None) -> None:
+        """Add a reference to a live or reclaimable page (prefix hit)."""
+        if page in self._ref:
+            self._ref[page] += 1
+        elif page in self._reclaim:
+            del self._reclaim[page]
+            self._ref[page] = 1
+            if rid is not None:
+                self._owner[page] = rid
+        else:
+            raise ValueError(f"acquire of unallocated page {page}")
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self.version += 1
+
+    def free(self, pages: List[int]) -> None:
+        """Drop one reference per page.  At refcount 0 a page returns to
+        the free list — or to the reclaimable LRU list if it is registered
+        in the prefix index (its content stays revivable)."""
+        for pg in pages:
+            if self._ref.get(pg, 0) <= 0:
+                raise ValueError(f"double free / foreign page {pg}")
+            self._ref[pg] -= 1
+            if self._ref[pg] == 0:
+                del self._ref[pg]
+                self._owner.pop(pg, None)
+                if pg in self._page_key:
+                    self._reclaim[pg] = None      # most-recently released
+                else:
+                    self._free.append(pg)
+        self.version += 1
+
+    release = free      # refcount-decrement reading of the same operation
+
+    # -- prefix index ---------------------------------------------------------
+
+    def register_prefix(self, prefix_tokens, page: int) -> None:
+        """Record that ``page`` holds the K/V of the last ``page_size``
+        tokens of ``prefix_tokens`` (whose length must be page-aligned).
+        No-op if that chain position is already registered, or if the
+        page already serves another chain, or caching is off."""
+        if not self.prefix_cache:
+            return
+        toks = tuple(int(t) for t in prefix_tokens)
+        assert toks and len(toks) % self.page_size == 0, len(toks)
+        parent, tail = toks[:-self.page_size], toks[-self.page_size:]
+        kids = self._children.setdefault(parent, {})
+        if tail in kids or page in self._page_key:
+            return
+        kids[tail] = page
+        self._page_key[page] = (parent, tail)
+        self.version += 1
+
+    def match_prefix(self, prompt) -> PrefixMatch:
+        """Longest cached page-aligned prefix of ``prompt`` (plus an
+        optional partial-page copy-on-write source), capped at
+        ``len(prompt) - 1`` so at least the final prompt token is always
+        recomputed."""
+        if not self.prefix_cache:
+            return PrefixMatch([], None, 0)
+        toks = tuple(int(t) for t in prompt)
+        limit = len(toks) - 1
+        pages: List[int] = []
+        key: TokenTuple = ()
+        i = 0
+        while (i + 1) * self.page_size <= limit:
+            tail = toks[i * self.page_size:(i + 1) * self.page_size]
+            pg = self._children.get(key, {}).get(tail)
+            if pg is None:
+                break
+            pages.append(pg)
+            key = key + tail
+            i += 1
+        n_cached = i * self.page_size
+        want = toks[n_cached:limit][:self.page_size]
+        cow, cow_len = None, 0
+        for tail, pg in self._children.get(key, {}).items():
+            r = 0
+            for a, b in zip(tail, want):
+                if a != b:
+                    break
+                r += 1
+            if r > cow_len:
+                cow, cow_len = pg, r
+        return PrefixMatch(pages, cow, n_cached + cow_len)
+
+    def _unregister(self, page: int) -> None:
+        parent, tail = self._page_key.pop(page)
+        kids = self._children[parent]
+        del kids[tail]
+        if not kids:
+            del self._children[parent]
+
 
 @dataclasses.dataclass
 class EngineMetrics:
     """Counters the serving engine updates in place; ``snapshot`` derives
-    the headline serving numbers (TTFT, tokens/s, page utilization)."""
+    the headline serving numbers (TTFT, tokens/s, page utilization,
+    prefix-hit rate)."""
     page_capacity: int = 0
     submitted: int = 0
     admitted: int = 0
     completed: int = 0
     ticks: int = 0
     prefill_tokens: int = 0
+    cached_prompt_tokens: int = 0  # prompt tokens served from the prefix cache
     first_tokens: int = 0        # one per completed prefill (the TTFT token)
     decode_tokens: int = 0
     pages_in_use: int = 0
     peak_pages_in_use: int = 0
+    cached_pages: int = 0        # reclaimable prefix-cache pages (ref 0)
+    evictions: int = 0           # cached pages reclaimed under pressure
     queued: int = 0
     active: int = 0
     ttft_s: List[float] = dataclasses.field(default_factory=list)
@@ -102,7 +288,8 @@ class EngineMetrics:
         if self._t_start is None:
             self._t_start = time.perf_counter()
 
-    def tick(self, *, queued: int, active: int, pages_in_use: int) -> None:
+    def tick(self, *, queued: int, active: int, pages_in_use: int,
+             cached_pages: int = 0, evictions: int = 0) -> None:
         now = time.perf_counter()
         if self._t_start is None:
             self._t_start = now
@@ -112,12 +299,15 @@ class EngineMetrics:
         self.active = active
         self.pages_in_use = pages_in_use
         self.peak_pages_in_use = max(self.peak_pages_in_use, pages_in_use)
+        self.cached_pages = cached_pages
+        self.evictions = evictions
 
     def snapshot(self) -> Dict[str, float]:
         wall = ((self._t_last - self._t_start)
                 if self._t_start is not None and self._t_last is not None
                 else 0.0)
         gen = self.decode_tokens + self.first_tokens
+        prompt_toks = self.prefill_tokens + self.cached_prompt_tokens
         return {
             "submitted": self.submitted,
             "admitted": self.admitted,
@@ -126,12 +316,19 @@ class EngineMetrics:
             "active": self.active,
             "ticks": self.ticks,
             "prefill_tokens": self.prefill_tokens,
+            "cached_prompt_tokens": self.cached_prompt_tokens,
+            "prefix_hit_rate": self.cached_prompt_tokens / max(prompt_toks, 1),
             "decode_tokens": self.decode_tokens,
             "generated_tokens": gen,
             "page_capacity": self.page_capacity,
             "pages_in_use": self.pages_in_use,
             "peak_pages_in_use": self.peak_pages_in_use,
+            "cached_pages": self.cached_pages,
+            "evictions": self.evictions,
             "page_utilization": self.pages_in_use / max(self.page_capacity, 1),
+            # live + cached prefix content: how full the pool really is
+            "kv_occupancy": (self.pages_in_use + self.cached_pages)
+                / max(self.page_capacity, 1),
             "peak_page_utilization":
                 self.peak_pages_in_use / max(self.page_capacity, 1),
             "ttft_avg_s": (sum(self.ttft_s) / len(self.ttft_s)

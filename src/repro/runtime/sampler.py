@@ -1,0 +1,81 @@
+"""Shared token sampler: temperature / top-k / top-p with per-request seeds.
+
+Both serving engines (every ``runtime.serving.Scheduler``) draw tokens
+through one :class:`Sampler`, so fixed-slot and paged decode share a
+single sampling implementation instead of each engine hard-coding
+argmax.  ``temperature <= 0`` (the default) is exact greedy argmax — the
+path the engine-equivalence tests pin to the pre-refactor outputs.
+
+Stochastic sampling is deterministic per ``(seed, rid, step)``: the RNG
+for every drawn token is seeded from the request's
+:class:`SamplingParams.seed`, its engine-assigned ``rid`` and the token
+index, so a replayed request reproduces its token stream exactly and two
+requests in the same batch never share a stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    temperature: 0 (default) = greedy argmax; > 0 scales logits.
+    top_k: keep only the k highest logits (0 = off).
+    top_p: nucleus sampling — keep the smallest set of tokens whose
+        probability mass reaches ``top_p`` (1.0 = off).
+    seed: base seed for the per-request token stream (>= 0).
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.seed < 0:
+            raise ValueError(f"seed must be >= 0, got {self.seed}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+class Sampler:
+    """Stateless sampler; all randomness derives from (seed, rid, step)."""
+
+    def sample(self, logits, params: SamplingParams = GREEDY, *,
+               rid: int = 0, step: int = 0) -> int:
+        """Draw one token id from a ``(V,)`` logits row."""
+        logits = np.asarray(logits, np.float64).reshape(-1)
+        if params is None or params.greedy:
+            return int(np.argmax(logits))
+        x = logits / params.temperature
+        if 0 < params.top_k < x.size:
+            kth = np.partition(x, -params.top_k)[-params.top_k]
+            x = np.where(x < kth, -np.inf, x)
+        x = x - np.max(x)
+        p = np.exp(x)
+        p /= p.sum()
+        if params.top_p < 1.0:
+            order = np.argsort(-p, kind="stable")
+            csum = np.cumsum(p[order])
+            # keep the minimal nucleus; the top token always survives
+            in_nucleus = np.zeros(p.size, bool)
+            in_nucleus[order] = csum - p[order] < params.top_p
+            p = np.where(in_nucleus, p, 0.0)
+            p /= p.sum()
+        rng = np.random.default_rng(
+            np.random.SeedSequence([params.seed, rid, step]))
+        return int(rng.choice(p.size, p=p))

@@ -1,34 +1,57 @@
-"""Continuous-batching serving engines (vLLM-style, JAX-native).
+"""Unified continuous-batching serving stack (vLLM-style, JAX-native).
 
-Two engines share one request/queue model:
+One :class:`Scheduler` runs every arch; a pluggable *KV placement policy*
+supplies the cache layout and the model arithmetic, and a shared
+``runtime.sampler.Sampler`` turns logits into tokens for both::
 
-:class:`PagedServingEngine` — the production path.  KV lives in a shared
-pool of fixed-size *pages* (``models.model.init_paged_cache``); each
-request owns only the pages its page table names, handed out by
-``runtime.paged_kv.BlockManager``.  Scheduling is continuous and
-preemption-free: a request is admitted the moment a seat and its full
-page budget (``ceil((prompt+max_new)/page_size)`` pages) are free — not
-when a whole ``max_len`` slot frees up — and long prompts prefill in
-chunks interleaved with everyone else's decode steps, so a 10k-token
-prompt does not stall the batch (bounded time-to-first-token for the
-short requests behind it).  Decode gathers K/V through the page table
-(``attention.paged_attention``; on TPU the global-attention decode step
-dispatches to the gather-over-page-table Pallas kernel in
-``kernels.decode_attention`` — ``RunOptions.paged_attn_impl`` selects
-jnp/pallas explicitly).
-Engine metrics (admitted/active/queued, page utilization, TTFT,
-tokens/s) accumulate in ``runtime.paged_kv.EngineMetrics``.
+            submit(prompt, sampling) ─────► FCFS queue
+                                               │
+                 ┌─────────────────────────────┘
+                 ▼
+            Scheduler.step()                      (one engine tick)
+              1. admission  — policy.try_admit(): reserve a seat and
+                 KV placement (fixed slot | pages + cached-prefix refs)
+              2. policy.prefill_tick()  — prompt K/V into placement
+              3. policy.decode_tick()   — one token per ready seat
+                 │ per-seat logits row
+                 ▼
+            Sampler.sample(logits, req.sampling, rid, step)
+                 │ next token id (greedy argmax when temperature=0)
+                 ▼
+            Scheduler bookkeeping — trace, EngineMetrics, eos/max-new
+            completion, finish() → policy.release() returns the KV
 
-:class:`ServingEngine` — the dense fixed-slot reference: B cache slots of
-``max_len`` tokens each, whole-prompt prefill scattered into the slot.
-It wastes ``max_len - len`` tokens of KV per short request and cannot
-admit more than B requests, but its arithmetic is the equivalence oracle
-for the paged path (tests assert token-identical outputs) and it still
-serves the archs the paged layout does not cover (SSM state, encoder/
-decoder, vision frontends — fixed-size per-request state; nothing to
-page).
+    placement policies
+      FixedSlotPolicy  — B dense cache slots of max_len tokens each;
+                         whole-prompt prefill scattered into the slot.
+                         Covers the archs with fixed-size per-request
+                         state (SSM, encoder/decoder, vision/audio
+                         frontends) and is the equivalence oracle for
+                         the paged path.
+      PagedPolicy      — KV in a shared pool of fixed-size pages
+                         (``runtime.paged_kv.BlockManager``), chunked
+                         prefill interleaved with decode, gather-over-
+                         page-table attention (``attention.paged_
+                         attention``; Pallas kernel on TPU), and
+                         refcounted prefix caching: admission points the
+                         leading page-table entries of a request whose
+                         prompt starts with an already-cached page-
+                         aligned token run at those physical pages
+                         (refcount++), copy-on-writes only the last
+                         partially matching page, and skips prefilling
+                         everything cached.  Refcount-0 cached pages
+                         park in an LRU list and are evicted under
+                         pressure.
 
-Both engines greedy-sample and complete on max_new_tokens or eos.
+:class:`ServingEngine` (fixed-slot) and :class:`PagedServingEngine` are
+thin façades binding the Scheduler to one policy; both complete requests
+on max_new_tokens or eos and ``run`` raises :class:`SchedulerStallError`
+when ticks run out with work still pending (stalls fail loudly).
+
+Scheduling is deterministic (FCFS admission, lowest-rid prefill first,
+seats scanned in index order) so trace tests can assert exact
+interleavings.  ``trace`` records (tick, event, rid) tuples with events:
+admit / prefix_hit / prefill_chunk / first_token / decode / finish.
 """
 from __future__ import annotations
 
@@ -44,6 +67,11 @@ import numpy as np
 from repro.models import model as M
 from repro.parallel.sharding import LogicalRules, SINGLE_DEVICE_RULES
 from repro.runtime.paged_kv import BlockManager, EngineMetrics
+from repro.runtime.sampler import GREEDY, Sampler, SamplingParams
+
+
+class SchedulerStallError(RuntimeError):
+    """``run`` exhausted ``max_ticks`` with requests still queued/active."""
 
 
 @dataclasses.dataclass
@@ -52,57 +80,229 @@ class Request:
     prompt: np.ndarray              # (P,) int32
     max_new_tokens: int
     eos_id: Optional[int] = None
+    sampling: SamplingParams = GREEDY
     # filled by the engine:
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None      # seat index (paged) / cache slot (fixed)
     pages: List[int] = dataclasses.field(default_factory=list)
-    prefill_pos: int = 0            # prompt tokens already prefilled (paged)
+    prefill_pos: int = 0            # prompt tokens already placed (paged)
+    cached_tokens: int = 0          # prompt tokens served by the prefix cache
+    registered_pages: int = 0       # prompt pages published to the prefix index
+    match_version: Optional[int] = None  # BlockManager.version at last failed
+    #                                      admission attempt (re-match gate)
     done: bool = False
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
 
 
-class ServingEngine:
-    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
-                 rules: LogicalRules = SINGLE_DEVICE_RULES,
-                 opts: Optional[M.RunOptions] = None):
+class Scheduler:
+    """Engine-agnostic serving loop: queue, seats, admission, sampling,
+    completion, metrics and trace.  All KV placement and model calls live
+    in the bound policy (see module docstring)."""
+
+    default_max_ticks = 100_000
+
+    def __init__(self, policy, *, max_seats: int,
+                 sampler: Optional[Sampler] = None, page_capacity: int = 0):
+        self.policy = policy
+        self.max_seats = max_seats
+        self.sampler = sampler or Sampler()
+        self.seats: Dict[int, Request] = {}             # seat -> request
+        self.queue: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self.metrics = EngineMetrics(page_capacity=page_capacity)
+        self.trace: List[Tuple[int, str, int]] = []
+        self._next_rid = 0
+        self._tick = 0
+        policy.bind(self)
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None) -> int:
+        req = Request(self._next_rid, np.asarray(prompt, np.int32),
+                      max_new_tokens, eos_id, sampling or GREEDY,
+                      t_submit=time.perf_counter())
+        self.policy.validate(req)
+        self._next_rid += 1
+        self.queue.append(req)
+        self.metrics.submitted += 1
+        return req.rid
+
+    def _free_seats(self) -> List[int]:
+        return [s for s in range(self.max_seats) if s not in self.seats]
+
+    def _admit_from_queue(self):
+        """FCFS: admit while the head request's seat AND placement are
+        available (preemption-free — an admitted request can always run
+        to completion; shortfall queues, never crashes)."""
+        for seat in self._free_seats():
+            if not self.queue:
+                break
+            req = self.queue[0]
+            if not self.policy.try_admit(req, seat):
+                break
+            self.queue.popleft()
+            req.slot = seat
+            self.seats[seat] = req
+            self.metrics.admitted += 1
+            self.trace.append((self._tick, "admit", req.rid))
+            if req.cached_tokens:
+                self.metrics.cached_prompt_tokens += req.cached_tokens
+                self.trace.append((self._tick, "prefix_hit", req.rid))
+
+    # -- token bookkeeping ----------------------------------------------------
+
+    def _emit_first_token(self, req: Request, logits_row) -> None:
+        """Sample the TTFT token from the last prompt position's logits."""
+        if req.sampling.greedy:
+            tok = int(jnp.argmax(logits_row))    # device reduce, 1 int out
+        else:
+            tok = self.sampler.sample(np.asarray(logits_row), req.sampling,
+                                      rid=req.rid, step=0)
+        req.generated.append(tok)
+        req.t_first_token = time.perf_counter()
+        self.metrics.ttft_s.append(req.t_first_token - req.t_submit)
+        self.metrics.first_tokens += 1
+        self.trace.append((self._tick, "first_token", req.rid))
+        hit_eos = req.eos_id is not None and tok == req.eos_id
+        if req.max_new_tokens <= 1 or hit_eos:
+            self.finish(req)
+
+    def _sample_decode_batch(self, last_logits, seat_ids) -> Dict[int, int]:
+        """Next token per seat from ``(max_seats, V)`` device logits.
+        Greedy seats share one on-device argmax (only ints cross to host);
+        full logits rows are pulled only when a stochastic seat needs
+        them."""
+        greedy = np.asarray(jnp.argmax(last_logits, axis=-1), np.int32)
+        rows = None
+        toks: Dict[int, int] = {}
+        for s in seat_ids:
+            req = self.seats[s]
+            if req.sampling.greedy:
+                toks[s] = int(greedy[s])
+            else:
+                if rows is None:
+                    rows = np.asarray(last_logits)
+                toks[s] = self.sampler.sample(rows[s], req.sampling,
+                                              rid=req.rid,
+                                              step=len(req.generated))
+        return toks
+
+    def _emit_decode_token(self, req: Request, tok: int) -> None:
+        req.generated.append(tok)
+        self.metrics.decode_tokens += 1
+        self.trace.append((self._tick, "decode", req.rid))
+        hit_eos = req.eos_id is not None and tok == req.eos_id
+        if len(req.generated) >= req.max_new_tokens or hit_eos:
+            self.finish(req)
+
+    def finish(self, req: Request) -> None:
+        req.done = True
+        req.t_done = time.perf_counter()
+        self.policy.release(req)
+        del self.seats[req.slot]
+        self.finished.append(req)
+        self.metrics.completed += 1
+        self.trace.append((self._tick, "finish", req.rid))
+
+    # -- one engine tick -----------------------------------------------------
+
+    def step(self):
+        self.metrics.begin()
+        self._tick += 1
+        self._admit_from_queue()
+        self.policy.prefill_tick()
+        self.policy.decode_tick()
+        cached, evictions = self.policy.cache_stats()
+        self.metrics.tick(queued=len(self.queue), active=len(self.seats),
+                          pages_in_use=self.policy.pages_in_use(),
+                          cached_pages=cached, evictions=evictions)
+
+    def run(self, max_ticks: Optional[int] = None) -> List[Request]:
+        if max_ticks is None:
+            max_ticks = self.default_max_ticks
+        t = 0
+        while (self.queue or self.seats) and t < max_ticks:
+            self.step()
+            t += 1
+        if self.queue or self.seats:
+            raise SchedulerStallError(
+                f"run() exhausted max_ticks={max_ticks} with "
+                f"{len(self.queue)} queued and {len(self.seats)} active "
+                f"requests (rids "
+                f"{sorted([r.rid for r in self.queue] + [r.rid for r in self.seats.values()])})")
+        return self.finished
+
+
+# ---------------------------------------------------------------------------
+# KV placement policies
+# ---------------------------------------------------------------------------
+
+class FixedSlotPolicy:
+    """Dense fixed-slot placement: B cache slots of ``max_len`` tokens,
+    whole-prompt prefill scattered into the slot.  Wastes
+    ``max_len - len`` KV tokens per short request, but its per-request
+    state is constant-size, so it covers SSM / encoder-decoder / frontend
+    archs and is the arithmetic oracle for the paged path."""
+
+    def __init__(self, cfg, params, *, slots: int, max_len: int,
+                 rules: LogicalRules, opts: Optional[M.RunOptions]):
         self.cfg = cfg
         self.params = params
-        self.B = slots
+        self.slots = slots
         self.max_len = max_len
         self.rules = rules
         self.opts = opts or M.RunOptions(q_chunk=min(max_len, 512))
         self.cache = M.init_cache(cfg, slots, max_len, self.opts)
         self.pos = jnp.zeros((slots,), jnp.int32)       # next write position
-        self.active: Dict[int, Request] = {}            # slot -> request
-        self.queue: Deque[Request] = deque()
-        self.finished: List[Request] = []
-        self._next_rid = 0
-
         self._decode = jax.jit(
             lambda p, c, t, q: M.decode_step(p, cfg, c, t, q, rules, self.opts))
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, cfg, b, rules, self.opts))
 
-    # -- queue ---------------------------------------------------------------
+    def bind(self, sched: Scheduler) -> None:
+        self.sched = sched
 
-    def submit(self, prompt, max_new_tokens: int = 16,
-               eos_id: Optional[int] = None) -> int:
-        req = Request(self._next_rid, np.asarray(prompt, np.int32),
-                      max_new_tokens, eos_id, t_submit=time.perf_counter())
-        self._next_rid += 1
-        self.queue.append(req)
-        return req.rid
+    def pages_in_use(self) -> int:
+        return 0
 
-    def _free_slots(self) -> List[int]:
-        return [s for s in range(self.B) if s not in self.active]
+    def cache_stats(self) -> Tuple[int, int]:
+        return 0, 0
 
-    # -- admission: per-slot prefill ------------------------------------------
+    def validate(self, req: Request) -> None:
+        total = len(req.prompt) + req.max_new_tokens
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(f"prompt length {len(req.prompt)} >= "
+                             f"max_len={self.max_len}")
+        if total > self.max_len:
+            raise ValueError(f"request needs {total} tokens > "
+                             f"max_len={self.max_len}; decode would clamp "
+                             "into the last cache slot and corrupt KV")
 
-    def _admit(self, req: Request, slot: int):
+    def try_admit(self, req: Request, seat: int) -> bool:
+        return True                       # the seat is the only resource
+
+    def release(self, req: Request) -> None:
+        pass                              # slot frees with the seat
+
+    def prefill_tick(self) -> None:
+        """Whole-prompt prefill for every seat admitted this tick, in rid
+        order (so the newly admitted request decodes in the same tick —
+        the pre-refactor fixed-slot cadence)."""
+        pending = sorted((r for r in self.sched.seats.values()
+                          if r.prefill_pos < len(r.prompt)),
+                         key=lambda r: r.rid)
+        for req in pending:
+            self._prefill_one(req)
+
+    def _prefill_one(self, req: Request) -> None:
+        slot = req.slot
         P = len(req.prompt)
-        assert P < self.max_len
         batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
         if self.cfg.frontend == "vision":
             batch["patches"] = jnp.zeros(
@@ -126,63 +326,38 @@ class ServingEngine:
                   for k2 in self.cache[pos]}
             for pos in self.cache}
         self.pos = self.pos.at[slot].set(P)
-        first = int(jnp.argmax(logits[0, -1]))
-        req.generated.append(first)
-        req.t_first_token = time.perf_counter()
-        req.slot = slot
-        self.active[slot] = req
+        req.prefill_pos = P
+        self.sched.metrics.prefill_tokens += P
+        self.sched._emit_first_token(req, logits[0, -1])
 
-    # -- one engine tick -------------------------------------------------------
-
-    def step(self):
-        """Admit queued requests into free slots, then decode one token for
-        every active slot."""
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            self._admit(self.queue.popleft(), slot)
-        if not self.active:
+    def decode_tick(self) -> None:
+        """One token for every active slot (prefill completes in the
+        admission tick, so every seat is decode-ready)."""
+        sched = self.sched
+        if not sched.seats:
             return
-        tok = np.zeros((self.B, 1), np.int32)
-        for slot, req in self.active.items():
+        tok = np.zeros((self.slots, 1), np.int32)
+        for slot, req in sched.seats.items():
             tok[slot, 0] = req.generated[-1]
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tok), self.pos)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        toks = sched._sample_decode_batch(logits[:, -1], list(sched.seats))
         new_pos = self.pos
-        for slot, req in list(self.active.items()):
-            req.generated.append(int(nxt[slot]))
+        for slot, req in list(sched.seats.items()):
             new_pos = new_pos.at[slot].add(1)
-            hit_eos = req.eos_id is not None and nxt[slot] == req.eos_id
-            if len(req.generated) >= req.max_new_tokens or hit_eos:
-                req.done = True
-                req.t_done = time.perf_counter()
-                self.finished.append(req)
-                del self.active[slot]
+            sched._emit_decode_token(req, toks[slot])
         self.pos = new_pos
 
-    def run(self, max_ticks: int = 10_000) -> List[Request]:
-        t = 0
-        while (self.queue or self.active) and t < max_ticks:
-            self.step()
-            t += 1
-        return self.finished
 
+class PagedPolicy:
+    """Paged-KV placement (see module docstring): shared page pool,
+    chunked prefill, page-table decode, refcounted prefix caching with
+    copy-on-write of the last partially shared page."""
 
-class PagedServingEngine:
-    """Paged-KV continuous-batching engine (see module docstring).
-
-    Scheduling is deterministic (FCFS admission, lowest-rid prefill first,
-    seats scanned in index order) so trace tests can assert exact
-    interleavings.  ``trace`` records (tick, event, rid) tuples with
-    events: admit / prefill_chunk / first_token / decode / finish.
-    """
-
-    def __init__(self, cfg, params, *, page_size: int = 16,
-                 num_pages: int = 64, max_seats: int = 8,
-                 max_seq_len: int = 256, prefill_chunk: int = 32,
-                 rules: LogicalRules = SINGLE_DEVICE_RULES,
-                 opts: Optional[M.RunOptions] = None):
+    def __init__(self, cfg, params, *, page_size: int, num_pages: int,
+                 max_seats: int, max_seq_len: int, prefill_chunk: int,
+                 rules: LogicalRules, opts: Optional[M.RunOptions],
+                 prefix_cache: bool = True):
         if not M.paged_cache_supported(cfg):
             raise ValueError(
                 f"{cfg.name}: paged KV needs a pure-attention decoder; "
@@ -196,31 +371,33 @@ class PagedServingEngine:
         self.rules = rules
         self.opts = opts or M.RunOptions(q_chunk=min(max_seq_len, 512))
 
-        self.bm = BlockManager(num_pages, page_size)
+        self.bm = BlockManager(num_pages, page_size, prefix_cache=prefix_cache)
         self.n_tables = max(1, -(-max_seq_len // page_size))
         self.cache = M.init_paged_cache(cfg, num_pages, page_size)
         self.page_table = np.zeros((max_seats, self.n_tables), np.int32)
         self.pos = np.zeros((max_seats,), np.int32)     # next write position
 
-        self.seats: Dict[int, Request] = {}             # seat -> request
-        self.queue: Deque[Request] = deque()
-        self.finished: List[Request] = []
-        self.metrics = EngineMetrics(page_capacity=self.bm.capacity)
-        self.trace: List[Tuple[int, str, int]] = []
-        self._next_rid = 0
-        self._tick = 0
-
         self._step_fn = jax.jit(
             lambda p, c, t, q, pt, nv: M.paged_decode_step(
                 p, cfg, c, t, q, pt, nv, rules, self.opts))
+        # donate the pool so copy-on-write is an in-place one-page update,
+        # not a fresh copy of the whole KV pool (donation is a no-op on
+        # CPU and would only warn there)
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._cow_fn = jax.jit(M.copy_paged_page, donate_argnums=donate)
 
-    # -- queue ---------------------------------------------------------------
+    def bind(self, sched: Scheduler) -> None:
+        self.sched = sched
 
-    def submit(self, prompt, max_new_tokens: int = 16,
-               eos_id: Optional[int] = None) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        total = len(prompt) + max_new_tokens
-        if len(prompt) == 0:
+    def pages_in_use(self) -> int:
+        return self.bm.in_use
+
+    def cache_stats(self) -> Tuple[int, int]:
+        return self.bm.cached, self.bm.evictions
+
+    def validate(self, req: Request) -> None:
+        total = len(req.prompt) + req.max_new_tokens
+        if len(req.prompt) == 0:
             raise ValueError("empty prompt")
         if total > self.max_seq_len:
             raise ValueError(f"request needs {total} tokens > "
@@ -228,44 +405,54 @@ class PagedServingEngine:
         if self.bm.pages_needed(total) > self.bm.capacity:
             raise ValueError(f"request needs {self.bm.pages_needed(total)} "
                              f"pages > pool capacity {self.bm.capacity}")
-        req = Request(self._next_rid, prompt, max_new_tokens, eos_id,
-                      t_submit=time.perf_counter())
-        self._next_rid += 1
-        self.queue.append(req)
-        self.metrics.submitted += 1
-        return req.rid
 
-    # -- scheduling ----------------------------------------------------------
+    # -- admission: seat + page budget + prefix reuse -------------------------
 
-    def _free_seats(self) -> List[int]:
-        return [s for s in range(self.max_seats) if s not in self.seats]
+    def try_admit(self, req: Request, seat: int) -> bool:
+        # a starved queue head re-attempts every tick; skip the O(prompt)
+        # prefix match until the pool/index actually changed
+        if req.match_version == self.bm.version:
+            return False
+        need = self.bm.pages_needed(len(req.prompt) + req.max_new_tokens)
+        match = self.bm.match_prefix(req.prompt)
+        # feasibility before any side effect: acquiring a reclaimable
+        # matched page consumes one allocatable slot, so a starved head
+        # request must not churn refcounts/LRU order every tick
+        reclaimed = sum(1 for pg in match.pages if self.bm.refcount(pg) == 0)
+        if not self.bm.can_alloc(need - len(match.pages) + reclaimed):
+            req.match_version = self.bm.version
+            return False
+        for pg in match.pages:                   # pin shares before alloc can
+            self.bm.acquire(pg, req.rid)         # evict them
+        fresh = self.bm.alloc(need - len(match.pages), req.rid)
+        if fresh is None:                        # unreachable after the guard
+            self.bm.free(match.pages)
+            return False
+        if match.cow_src is not None:
+            # the partially matched page: copy, then own the copy — its
+            # tail will be overwritten with this request's own tokens
+            self.cache = self._cow_fn(self.cache, match.cow_src, fresh[0])
+        req.pages = match.pages + fresh
+        req.prefill_pos = req.cached_tokens = match.n_cached
+        req.registered_pages = len(match.pages)
+        row = np.zeros((self.n_tables,), np.int32)
+        row[:len(req.pages)] = req.pages
+        self.page_table[seat] = row
+        self.pos[seat] = 0
+        return True
 
-    def _admit_from_queue(self):
-        """FCFS: admit while the head request's seat AND full page budget
-        are available (preemption-free — an admitted request can always
-        run to completion; shortfall queues, never crashes)."""
-        for seat in self._free_seats():
-            if not self.queue:
-                break
-            req = self.queue[0]
-            need = self.bm.pages_needed(len(req.prompt) + req.max_new_tokens)
-            pages = self.bm.alloc(need, req.rid)
-            if pages is None:
-                break
-            self.queue.popleft()
-            req.slot, req.pages = seat, pages
-            row = np.zeros((self.n_tables,), np.int32)
-            row[:len(pages)] = pages
-            self.page_table[seat] = row
-            self.pos[seat] = 0
-            self.seats[seat] = req
-            self.metrics.admitted += 1
-            self.trace.append((self._tick, "admit", req.rid))
+    def release(self, req: Request) -> None:
+        self.bm.free(req.pages)
+        self.page_table[req.slot] = 0
+        self.pos[req.slot] = 0
 
-    def _prefill_tick(self):
+    # -- prefill / decode ------------------------------------------------------
+
+    def prefill_tick(self) -> None:
         """One prompt chunk for the oldest mid-prefill request (chunked
-        prefill: long prompts share the engine with everyone's decode)."""
-        cands = [r for r in self.seats.values()
+        prefill: long prompts share the engine with everyone's decode).
+        Requests with a prefix-cache hit start at ``cached_tokens``."""
+        cands = [r for r in self.sched.seats.values()
                  if r.prefill_pos < len(r.prompt)]
         if not cands:
             return
@@ -282,72 +469,132 @@ class PagedServingEngine:
             jnp.asarray(self.page_table[seat:seat + 1]),
             jnp.asarray([c], jnp.int32))
         req.prefill_pos += c
-        self.metrics.prefill_tokens += c
-        self.trace.append((self._tick, "prefill_chunk", req.rid))
+        self.sched.metrics.prefill_tokens += c
+        self.sched.trace.append((self.sched._tick, "prefill_chunk", req.rid))
+        self._register_full_pages(req)
         if req.prefill_pos == len(req.prompt):
-            first = int(jnp.argmax(logits[0, c - 1]))
-            req.generated.append(first)
-            req.t_first_token = time.perf_counter()
-            self.metrics.ttft_s.append(req.t_first_token - req.t_submit)
-            self.metrics.first_tokens += 1
             self.pos[seat] = len(req.prompt)
-            self.trace.append((self._tick, "first_token", req.rid))
-            hit_eos = req.eos_id is not None and first == req.eos_id
-            if req.max_new_tokens <= 1 or hit_eos:
-                self._finish(req)
+            self.sched._emit_first_token(req, logits[0, c - 1])
 
-    def _finish(self, req: Request):
-        seat = req.slot
-        req.done = True
-        req.t_done = time.perf_counter()
-        self.bm.free(req.pages)
-        self.page_table[seat] = 0
-        self.pos[seat] = 0
-        del self.seats[seat]
-        self.finished.append(req)
-        self.metrics.completed += 1
-        self.trace.append((self._tick, "finish", req.rid))
+    def _register_full_pages(self, req: Request) -> None:
+        """Publish every page now fully covered by prompt tokens to the
+        prefix index (idempotent for pages the request shares)."""
+        if not self.bm.prefix_cache:
+            return
+        full = req.prefill_pos // self.page_size
+        while req.registered_pages < full:
+            i = req.registered_pages
+            self.bm.register_prefix(req.prompt[:(i + 1) * self.page_size],
+                                    req.pages[i])
+            req.registered_pages += 1
 
-    def _decode_tick(self):
+    def decode_tick(self) -> None:
         """One token for every seat whose prefill is complete."""
-        decoding = [s for s, r in self.seats.items()
+        sched = self.sched
+        decoding = [s for s, r in sched.seats.items()
                     if r.prefill_pos >= len(r.prompt)]
         if not decoding:
             return
         tok = np.zeros((self.max_seats, 1), np.int32)
         nv = np.zeros((self.max_seats,), np.int32)
         for s in decoding:
-            tok[s, 0] = self.seats[s].generated[-1]
+            tok[s, 0] = sched.seats[s].generated[-1]
             nv[s] = 1
         logits, self.cache = self._step_fn(
             self.params, self.cache, jnp.asarray(tok),
             jnp.asarray(self.pos), jnp.asarray(self.page_table),
             jnp.asarray(nv))
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        toks = sched._sample_decode_batch(logits[:, 0], decoding)
         for s in decoding:
-            req = self.seats[s]
-            req.generated.append(int(nxt[s]))
+            req = sched.seats[s]
             self.pos[s] += 1
-            self.metrics.decode_tokens += 1
-            self.trace.append((self._tick, "decode", req.rid))
-            hit_eos = req.eos_id is not None and nxt[s] == req.eos_id
-            if len(req.generated) >= req.max_new_tokens or hit_eos:
-                self._finish(req)
+            sched._emit_decode_token(req, toks[s])
 
-    # -- one engine tick -----------------------------------------------------
 
-    def step(self):
-        self.metrics.begin()
-        self._tick += 1
-        self._admit_from_queue()
-        self._prefill_tick()
-        self._decode_tick()
-        self.metrics.tick(queued=len(self.queue), active=len(self.seats),
-                          pages_in_use=self.bm.in_use)
+# ---------------------------------------------------------------------------
+# Engine façades (public API)
+# ---------------------------------------------------------------------------
 
-    def run(self, max_ticks: int = 100_000) -> List[Request]:
-        t = 0
-        while (self.queue or self.seats) and t < max_ticks:
-            self.step()
-            t += 1
-        return self.finished
+class ServingEngine(Scheduler):
+    """Fixed-slot continuous-batching engine: the Scheduler bound to
+    :class:`FixedSlotPolicy`.  Serves every arch (SSM, enc-dec, frontend)
+    and is the equivalence oracle for the paged engine."""
+
+    default_max_ticks = 10_000
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
+                 rules: LogicalRules = SINGLE_DEVICE_RULES,
+                 opts: Optional[M.RunOptions] = None,
+                 sampler: Optional[Sampler] = None):
+        policy = FixedSlotPolicy(cfg, params, slots=slots, max_len=max_len,
+                                 rules=rules, opts=opts)
+        super().__init__(policy, max_seats=slots, sampler=sampler)
+        self.cfg = cfg
+        self.params = params
+        self.B = slots
+        self.max_len = max_len
+        self.rules = rules
+        self.opts = policy.opts
+
+    @property
+    def active(self) -> Dict[int, Request]:
+        return self.seats
+
+    @property
+    def cache(self):
+        return self.policy.cache
+
+    @property
+    def pos(self):
+        return self.policy.pos
+
+
+class PagedServingEngine(Scheduler):
+    """Paged-KV continuous-batching engine: the Scheduler bound to
+    :class:`PagedPolicy` (shared page pool, chunked prefill, refcounted
+    prefix caching — ``prefix_cache=False`` disables sharing for A/B
+    comparisons)."""
+
+    default_max_ticks = 100_000
+
+    def __init__(self, cfg, params, *, page_size: int = 16,
+                 num_pages: int = 64, max_seats: int = 8,
+                 max_seq_len: int = 256, prefill_chunk: int = 32,
+                 rules: LogicalRules = SINGLE_DEVICE_RULES,
+                 opts: Optional[M.RunOptions] = None,
+                 sampler: Optional[Sampler] = None,
+                 prefix_cache: bool = True):
+        policy = PagedPolicy(cfg, params, page_size=page_size,
+                             num_pages=num_pages, max_seats=max_seats,
+                             max_seq_len=max_seq_len,
+                             prefill_chunk=prefill_chunk, rules=rules,
+                             opts=opts, prefix_cache=prefix_cache)
+        super().__init__(policy, max_seats=max_seats, sampler=sampler,
+                         page_capacity=policy.bm.capacity)
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_seq_len = max_seq_len
+        self.prefill_chunk = prefill_chunk
+        self.rules = rules
+        self.opts = policy.opts
+
+    @property
+    def bm(self) -> BlockManager:
+        return self.policy.bm
+
+    @property
+    def n_tables(self) -> int:
+        return self.policy.n_tables
+
+    @property
+    def cache(self):
+        return self.policy.cache
+
+    @property
+    def page_table(self) -> np.ndarray:
+        return self.policy.page_table
+
+    @property
+    def pos(self) -> np.ndarray:
+        return self.policy.pos

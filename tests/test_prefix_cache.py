@@ -1,0 +1,271 @@
+"""Refcounted prefix-aware BlockManager + engine-level prefix caching:
+refcount invariants and double-free protection over random admit/release
+schedules, prefix match/register semantics, LRU eviction, live page
+sharing across seats, and copy-on-write token-exactness (caching on vs
+off)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models import model as M
+from repro.runtime.paged_kv import BlockManager
+from repro.runtime.serving import PagedServingEngine
+
+
+# -- refcounting --------------------------------------------------------------
+
+def test_refcount_share_release_and_double_free():
+    bm = BlockManager(num_pages=6, page_size=4)
+    (pg,) = bm.alloc(1, rid=0)
+    bm.acquire(pg, rid=1)
+    bm.acquire(pg, rid=2)
+    assert bm.refcount(pg) == 3
+    bm.free([pg])
+    bm.free([pg])
+    assert bm.refcount(pg) == 1 and bm.in_use == 1
+    bm.free([pg])
+    assert bm.refcount(pg) == 0 and bm.in_use == 0
+    with pytest.raises(ValueError):
+        bm.free([pg])                           # double free
+    with pytest.raises(ValueError):
+        bm.acquire(pg)                          # not live, not cached
+
+
+def test_registered_page_parks_reclaimable_and_revives():
+    bm = BlockManager(num_pages=4, page_size=2)
+    (pg,) = bm.alloc(1, rid=0)
+    bm.register_prefix([5, 6], pg)
+    bm.free([pg])
+    # refcount 0 but registered: reclaimable, still allocatable capacity
+    assert bm.in_use == 0 and bm.cached == 1
+    assert bm.available == bm.capacity == 3
+    m = bm.match_prefix([5, 6, 7])
+    assert m.pages == [pg] and m.n_cached == 2
+    bm.acquire(pg, rid=1)                       # prefix hit revives it
+    assert bm.refcount(pg) == 1 and bm.cached == 0
+
+
+def test_lru_eviction_under_pressure_unregisters():
+    bm = BlockManager(num_pages=4, page_size=2)
+    pages = bm.alloc(3, rid=0)
+    for i, pg in enumerate(pages):
+        bm.register_prefix([10 + i] * 2, pg)    # three distinct 1-page chains
+    bm.free([pages[1]])                         # reclaim order: 1, 0, 2
+    bm.free([pages[0]])
+    bm.free([pages[2]])
+    got = bm.alloc(2, rid=1)                    # evicts LRU pages 1 then 0
+    assert got == [pages[1], pages[0]]
+    assert bm.evictions == 2
+    assert bm.match_prefix([11, 11, 0]).pages == []      # evicted chain gone
+    assert bm.match_prefix([12, 12, 0]).pages == [pages[2]]  # survivor intact
+
+
+def test_match_prefix_full_partial_and_last_token_cap():
+    bm = BlockManager(num_pages=8, page_size=4)
+    p0, p1 = bm.alloc(2, rid=0)
+    prompt = list(range(100, 108))              # two full pages
+    bm.register_prefix(prompt[:4], p0)
+    bm.register_prefix(prompt[:8], p1)
+
+    # full-page match capped at len-1: an identical prompt reuses page 0
+    # fully but page 1 only as a copy-on-write partial (last token always
+    # recomputed so admission has logits to sample from)
+    m = bm.match_prefix(prompt)
+    assert m.pages == [p0] and m.cow_src == p1 and m.n_cached == 7
+    # longer prompt: both pages shared outright
+    m = bm.match_prefix(prompt + [9, 9, 9])
+    assert m.pages == [p0, p1] and m.cow_src is None and m.n_cached == 8
+    # divergence mid-page-2: partial cow match of the common run
+    m = bm.match_prefix(prompt[:6] + [55, 55, 55])
+    assert m.pages == [p0] and m.cow_src == p1 and m.n_cached == 6
+    # divergence in page 1: only the chain head matches
+    m = bm.match_prefix(prompt[:4] + [55, 55, 55, 55, 55])
+    assert m.pages == [p0] and m.cow_src is None and m.n_cached == 4
+    # cold prompt: nothing
+    m = bm.match_prefix([1, 2, 3, 4, 5])
+    assert m.pages == [] and m.cow_src is None and m.n_cached == 0
+
+
+def test_register_is_idempotent_and_one_chain_per_page():
+    bm = BlockManager(num_pages=4, page_size=2)
+    a, b = bm.alloc(2, rid=0)
+    bm.register_prefix([1, 2], a)
+    bm.register_prefix([1, 2], b)               # chain slot taken: no-op
+    assert bm.match_prefix([1, 2, 0]).pages == [a]
+    bm.register_prefix([3, 4], a)               # page already indexed: no-op
+    assert bm.match_prefix([3, 4, 0]).pages == []
+
+
+def test_random_schedules_refcount_invariants():
+    """Property-style: random interleavings of alloc/acquire/release with
+    registration never violate the page-conservation invariants."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        bm = BlockManager(num_pages=10, page_size=2)
+        shadow = {}                              # page -> expected refcount
+        next_tok = [0]
+        for _ in range(300):
+            op = rng.choice(["alloc", "acquire", "release", "register"])
+            if op == "alloc":
+                n = int(rng.integers(1, 4))
+                pages = bm.alloc(n, rid=0)
+                if pages is None:
+                    assert bm.available < n
+                else:
+                    for pg in pages:
+                        assert shadow.get(pg, 0) == 0
+                        shadow[pg] = 1
+            elif op == "acquire" and bm.in_use:
+                live = [p for p, r in shadow.items() if r > 0]
+                pg = int(rng.choice(live))
+                bm.acquire(pg)
+                shadow[pg] += 1
+            elif op == "release" and bm.in_use:
+                live = [p for p, r in shadow.items() if r > 0]
+                pg = int(rng.choice(live))
+                bm.free([pg])
+                shadow[pg] -= 1
+            elif op == "register" and bm.in_use:
+                live = [p for p, r in shadow.items() if r > 0]
+                pg = int(rng.choice(live))
+                next_tok[0] += 2
+                bm.register_prefix([next_tok[0], next_tok[0] + 1], pg)
+            # conservation: live + free + reclaimable == capacity
+            assert bm.in_use + bm.available == bm.capacity
+            assert bm.in_use == sum(1 for r in shadow.values() if r > 0)
+            for pg, r in shadow.items():
+                assert bm.refcount(pg) == r
+            # releasing a dead page always raises
+            dead = [p for p, r in shadow.items() if r == 0]
+            if dead:
+                with pytest.raises(ValueError):
+                    bm.free([int(rng.choice(dead))])
+        # drain: everything returns to allocatable state
+        for pg in [p for p, r in shadow.items() if r > 0]:
+            for _ in range(shadow[pg]):
+                bm.free([pg])
+        assert bm.in_use == 0 and bm.available == bm.capacity
+
+
+# -- engine-level prefix caching ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = reduced_config(get_config("qwen3-1.7b"))
+    params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run_workload(cfg, params, reqs, *, prefix_cache, stagger=True, **kw):
+    eng = PagedServingEngine(cfg, params, prefix_cache=prefix_cache, **kw)
+    outs = {}
+    for prompt, gen in reqs:
+        rid = eng.submit(prompt, max_new_tokens=gen)
+        outs[rid] = None
+        if stagger:                 # let earlier requests publish pages
+            for _ in range(3):
+                eng.step()
+    done = eng.run()
+    for r in done:
+        outs[r.rid] = r.generated
+    return eng, outs
+
+
+def test_shared_prefix_pages_shared_live_and_cow(engine_setup):
+    """A request whose prompt repeats an already-prefilled prompt shares
+    the full prefix pages (same physical pages, refcount 2) and owns a
+    copy-on-write page for the final partial page."""
+    cfg, params = engine_setup
+    eng = PagedServingEngine(cfg, params, page_size=4, num_pages=16,
+                             max_seats=2, max_seq_len=24, prefill_chunk=4)
+    prompt = (np.arange(12, dtype=np.int32) * 5) % cfg.vocab_size
+    eng.submit(prompt, max_new_tokens=8)
+    for _ in range(4):                  # prefill all 12 tokens -> 3 pages
+        eng.step()
+    a = eng.seats[0]
+    assert a.prefill_pos == 12 and a.registered_pages == 3
+
+    eng.submit(prompt, max_new_tokens=8)
+    eng.step()                          # admit the twin
+    b = eng.seats[1]
+    # full pages 0,1 shared; page 2 is a CoW copy (last token recomputed)
+    assert b.pages[:2] == a.pages[:2]
+    assert b.pages[2] != a.pages[2]
+    assert b.cached_tokens == 11
+    for pg in a.pages[:2]:
+        assert eng.bm.refcount(pg) == 2
+    assert eng.bm.refcount(a.pages[2]) == 1
+    assert ("prefix_hit" in {k for (_, k, r) in eng.trace if r == b.rid})
+
+    done = eng.run()
+    assert eng.bm.in_use == 0
+    assert eng.bm.available == eng.bm.capacity
+    # identical prompts + greedy => identical outputs, via different pages
+    gens = {r.rid: r.generated for r in done}
+    assert gens[0] == gens[1]
+
+
+def test_prefix_cache_token_identical_on_vs_off(engine_setup):
+    """Copy-on-write correctness: a workload with heavy prefix overlap
+    (including a full-prompt repeat) generates token-identical outputs
+    with caching on and off."""
+    cfg, params = engine_setup
+    rng = np.random.default_rng(17)
+    base = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    reqs = [
+        (base, 5),
+        (np.concatenate([base, rng.integers(0, cfg.vocab_size, 5).astype(np.int32)]), 4),
+        (base.copy(), 5),                         # exact repeat
+        (np.concatenate([base[:8], rng.integers(0, cfg.vocab_size, 3).astype(np.int32)]), 3),
+        (rng.integers(0, cfg.vocab_size, 7).astype(np.int32), 4),  # cold
+    ]
+    kw = dict(page_size=8, num_pages=24, max_seats=3, max_seq_len=32,
+              prefill_chunk=8)
+    eng_on, on = _run_workload(cfg, params, reqs, prefix_cache=True, **kw)
+    _, off = _run_workload(cfg, params, reqs, prefix_cache=False, **kw)
+    assert on == off
+    m = eng_on.metrics.snapshot()
+    assert m["cached_prompt_tokens"] > 0
+    assert 0 < m["prefix_hit_rate"] < 1
+    # every prompt token was either prefilled or served from cache
+    total_prompt = sum(len(p) for p, _ in reqs)
+    assert m["prefill_tokens"] + m["cached_prompt_tokens"] == total_prompt
+
+
+def test_prefix_cache_skips_prefill_work(engine_setup):
+    """The cached run prefills strictly fewer tokens and emits
+    prefix_hit trace events for the repeat requests."""
+    cfg, params = engine_setup
+    prompt = (np.arange(17, dtype=np.int32) * 3) % cfg.vocab_size
+    reqs = [(prompt, 3)] * 4
+    kw = dict(page_size=8, num_pages=32, max_seats=2, max_seq_len=32,
+              prefill_chunk=8)
+    eng_on, _ = _run_workload(cfg, params, reqs, prefix_cache=True, **kw)
+    eng_off, _ = _run_workload(cfg, params, reqs, prefix_cache=False, **kw)
+    assert eng_on.metrics.prefill_tokens < eng_off.metrics.prefill_tokens
+    hits = [r for (_, k, r) in eng_on.trace if k == "prefix_hit"]
+    assert len(hits) == 3                        # every repeat after the first
+
+
+def test_eviction_pressure_keeps_outputs_exact(engine_setup):
+    """A pool too small to retain every cached prefix evicts LRU cached
+    pages, still completes everyone, and outputs match caching-off."""
+    cfg, params = engine_setup
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+               for _ in range(3)]
+    # revisit each prompt twice, interleaved, under a tiny page budget
+    reqs = [(prompts[i % 3], 3) for i in range(6)]
+    kw = dict(page_size=4, num_pages=9, max_seats=2, max_seq_len=20,
+              prefill_chunk=4)
+    eng_on, on = _run_workload(cfg, params, reqs, prefix_cache=True, **kw)
+    _, off = _run_workload(cfg, params, reqs, prefix_cache=False, **kw)
+    assert on == off
+    assert eng_on.bm.in_use == 0
+    assert eng_on.bm.available == eng_on.bm.capacity
+    m = eng_on.metrics.snapshot()
+    assert m["evictions"] == eng_on.bm.evictions > 0   # pressure surfaced
+    assert m["kv_occupancy"] >= m["page_utilization"]
+    # failed admissions must not inflate the live-page high-water mark
+    assert eng_on.bm.peak_in_use <= eng_on.bm.capacity

@@ -1,5 +1,5 @@
 """Continuous-batching engine: correctness vs the plain serve path,
-slot reuse, and mixed-length scheduling."""
+slot reuse, mixed-length scheduling, and loud stall failures."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +8,8 @@ import pytest
 from repro.configs import get_config, reduced_config
 from repro.models import model as M
 from repro.parallel.sharding import SINGLE_DEVICE_RULES
-from repro.runtime.serving import ServingEngine
+from repro.runtime.serving import (PagedServingEngine, SchedulerStallError,
+                                   ServingEngine)
 
 
 @pytest.fixture(scope="module")
@@ -75,3 +76,43 @@ def test_mixed_lengths_isolated(engine_setup):
     done = busy.run()
     got = next(r for r in done if len(r.prompt) == 9).generated
     assert got == ref
+
+
+def test_fixed_engine_rejects_cache_overflow(engine_setup):
+    """prompt + max_new_tokens > max_len must raise at submit (decode
+    would otherwise clamp writes into the last slot and corrupt KV)."""
+    cfg, params = engine_setup
+    eng = ServingEngine(cfg, params, slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(10, dtype=np.int32), max_new_tokens=8)
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(16, dtype=np.int32), max_new_tokens=1)
+    with pytest.raises(ValueError):
+        eng.submit(np.asarray([], np.int32), max_new_tokens=2)
+    eng.submit(np.arange(10, dtype=np.int32), max_new_tokens=6)  # == max_len
+    assert len(eng.run()) == 1
+
+
+def test_run_raises_on_stall_fixed(engine_setup):
+    """Exhausting max_ticks with unfinished requests raises instead of
+    silently returning a partial result."""
+    cfg, params = engine_setup
+    eng = ServingEngine(cfg, params, slots=1, max_len=32)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=8)
+    with pytest.raises(SchedulerStallError):
+        eng.run(max_ticks=2)
+    # the same workload completes with enough ticks
+    eng2 = ServingEngine(cfg, params, slots=1, max_len=32)
+    eng2.submit(np.arange(4, dtype=np.int32), max_new_tokens=8)
+    assert len(eng2.run()) == 1
+
+
+def test_run_raises_on_stall_paged(engine_setup):
+    cfg, params = engine_setup
+    eng = PagedServingEngine(cfg, params, page_size=8, num_pages=8,
+                             max_seats=1, max_seq_len=24, prefill_chunk=8)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=6)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=6)
+    with pytest.raises(SchedulerStallError) as ei:
+        eng.run(max_ticks=1)
+    assert "queued" in str(ei.value)
