@@ -25,18 +25,31 @@ def main():
                     help="gemma3 exercises the 5:1 local:global attention "
                          "cache (sliding-window + global layers)")
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=None,
+                    help="fixed prompt length (batch default 32; the "
+                         "paged engine samples lengths when unset)")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-seq-len", type=int, default=None,
+                    help="per-request prompt+generation bound (paged)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable prefix-cache page sharing (paged engine)")
+    ap.add_argument("--lazy-pages", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="on-demand KV page growth + preemption (paged)")
+    ap.add_argument("--watermark", type=float, default=0.05,
+                    help="lazy admission free-page headroom fraction")
     add_sampling_args(ap)
     args = ap.parse_args()
     sampling = sampling_from_args(args)
     if args.engine == "paged":
         r = serve_paged(args.arch, requests=args.requests, gen=args.gen,
                         seed=args.seed, eos_id=args.eos_id, sampling=sampling,
-                        prefix_cache=not args.no_prefix_cache)
+                        prefix_cache=not args.no_prefix_cache,
+                        max_seq_len=args.max_seq_len,
+                        prompt_len=args.prompt_len,
+                        lazy_pages=args.lazy_pages,
+                        watermark=args.watermark)
         m = r["metrics"]
         print(f"served:  {m['completed']:.0f} requests, "
               f"{m['generated_tokens']:.0f} tokens "
@@ -46,11 +59,12 @@ def main():
         print(f"pages:   peak {m['peak_pages_in_use']:.0f}/"
               f"{m['page_capacity']:.0f} "
               f"(util {m['peak_page_utilization']:.2f}, "
-              f"prefix hits {m['prefix_hit_rate']:.2f})")
+              f"prefix hits {m['prefix_hit_rate']:.2f}, "
+              f"preemptions {m['preemptions']:.0f})")
         for req in r["finished"][:4]:
             print(f"  request[{req.rid}] -> {req.generated}")
         return
-    r = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+    r = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len or 32,
               gen=args.gen, seed=args.seed, sampling=sampling)
     print(f"prefill: {r['prefill_s'] * 1e3:.0f} ms")
     print(f"decode:  {r['decode_s'] * 1e3:.0f} ms "

@@ -108,8 +108,28 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
                 reduced: bool = True, seed: int = 0,
                 eos_id: Optional[int] = None,
                 sampling: Optional[SamplingParams] = None,
-                prefix_cache: bool = True):
-    """Drive the paged engine over a mixed-length request stream."""
+                prefix_cache: bool = True,
+                max_seq_len: Optional[int] = None,
+                prompt_len: Optional[int] = None,
+                lazy_pages: bool = True, watermark: float = 0.05):
+    """Drive the paged engine over a request stream.
+
+    ``max_seq_len`` bounds prompt + generation per request and defaults
+    to ``(prompt_len or 3 * page_size) + gen``.  ``prompt_len`` fixes
+    every prompt's length; when None, lengths are sampled to fit
+    ``max_seq_len`` minus the generation budget.  Infeasible
+    combinations raise here with the offending flags named instead of
+    crashing inside ``submit``."""
+    if max_seq_len is None:
+        max_seq_len = (prompt_len if prompt_len else 3 * page_size) + gen
+    if prompt_len is not None and prompt_len + gen > max_seq_len:
+        raise ValueError(
+            f"--prompt-len {prompt_len} + --gen {gen} exceeds "
+            f"--max-seq-len {max_seq_len}")
+    if prompt_len is None and max_seq_len - gen < 2:
+        raise ValueError(
+            f"--max-seq-len {max_seq_len} leaves no room for prompts "
+            f"after --gen {gen}; raise it or pass --prompt-len")
     cfg = get_config(arch)
     if reduced:
         cfg = reduced_config(cfg)
@@ -117,12 +137,14 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
                            dtype=jnp.float32)
     eng = PagedServingEngine(cfg, params, page_size=page_size,
                              num_pages=num_pages, max_seats=max_seats,
-                             max_seq_len=3 * page_size + gen,
+                             max_seq_len=max_seq_len,
                              prefill_chunk=prefill_chunk,
-                             prefix_cache=prefix_cache)
+                             prefix_cache=prefix_cache,
+                             lazy_pages=lazy_pages, watermark=watermark)
     rng = np.random.default_rng(seed)
     for _ in range(requests):
-        plen = int(rng.integers(4, 3 * page_size))
+        plen = (prompt_len if prompt_len
+                else int(rng.integers(1, max_seq_len - gen)))
         eng.submit(rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
                    max_new_tokens=int(rng.integers(2, gen + 1)),
                    eos_id=eos_id, sampling=sampling)
@@ -152,13 +174,26 @@ def main():
     ap.add_argument("--engine", choices=("batch", "paged"), default="batch")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=None,
+                    help="fixed prompt length (batch default 32; the "
+                         "paged engine samples lengths when unset)")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=128)
+    ap.add_argument("--max-seq-len", type=int, default=None,
+                    help="per-request prompt+generation bound (paged; "
+                         "default (prompt_len or 3*page_size) + gen)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable prefix-cache page sharing (paged engine)")
+    ap.add_argument("--lazy-pages", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="allocate KV pages on demand during decode and "
+                         "preempt under pressure (--no-lazy-pages restores "
+                         "up-front full reservation)")
+    ap.add_argument("--watermark", type=float, default=0.05,
+                    help="lazy admission gate: free-page headroom kept at "
+                         "admission, as a fraction of pool capacity")
     add_sampling_args(ap)
     args = ap.parse_args()
     sampling = sampling_from_args(args)
@@ -166,18 +201,23 @@ def main():
         r = serve_paged(args.arch, requests=args.requests, gen=args.gen,
                         page_size=args.page_size, num_pages=args.num_pages,
                         seed=args.seed, eos_id=args.eos_id, sampling=sampling,
-                        prefix_cache=not args.no_prefix_cache)
+                        prefix_cache=not args.no_prefix_cache,
+                        max_seq_len=args.max_seq_len,
+                        prompt_len=args.prompt_len,
+                        lazy_pages=args.lazy_pages, watermark=args.watermark)
         m = r["metrics"]
         print(f"[serve.paged] {m['completed']:.0f} requests "
               f"{m['generated_tokens']:.0f} tokens in {m['wall_s'] * 1e3:.0f}ms "
               f"({m['tokens_per_s']:.1f} tok/s) "
               f"ttft_avg={m['ttft_avg_s'] * 1e3:.0f}ms "
               f"peak_page_util={m['peak_page_utilization']:.2f} "
-              f"prefix_hit_rate={m['prefix_hit_rate']:.2f}")
+              f"prefix_hit_rate={m['prefix_hit_rate']:.2f} "
+              f"preemptions={m['preemptions']:.0f}")
         print("[serve.paged] sample tokens:",
               r["finished"][0].generated[:12])
         return
-    r = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+    r = serve(args.arch, batch=args.batch,
+              prompt_len=args.prompt_len or 32,
               gen=args.gen, seed=args.seed, sampling=sampling)
     print(f"[serve] prefill={r['prefill_s'] * 1e3:.0f}ms "
           f"decode={r['decode_s'] * 1e3:.0f}ms "

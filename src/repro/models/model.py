@@ -373,9 +373,15 @@ def copy_paged_page(cache, src, dst):
     paged cache (prefix-cache copy-on-write: a request that shares only
     part of a cached page gets its own copy to write its tail into).
 
-    ``src``/``dst`` may be traced scalars; jit-compatible.
+    ``src``/``dst`` may be traced scalars; jit-compatible.  ``src == dst``
+    is a no-op: callers jit this with the pool donated, and an aliased
+    self-copy must not read from the buffer it is overwriting.
     """
-    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), cache)
+    return jax.lax.cond(
+        jnp.asarray(src) == jnp.asarray(dst),
+        lambda c: c,
+        lambda c: jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), c),
+        cache)
 
 
 def paged_decode_step(params, cfg: ModelConfig, cache, tokens, pos,

@@ -16,17 +16,33 @@ them, and copy-on-writes only the last partially matching page.
 
 Page lifecycle::
 
-    free ──alloc(ref=1)──► live ──acquire──► shared (ref+=1)
-      ▲                      │ release (ref-=1) ... ref==0:
+    free ──alloc / try_grow (ref=1)──► live ──acquire──► shared (ref+=1)
+      ▲                      │ release/preempt (ref-=1) ... ref==0:
       │                      ├─ registered in prefix index ─► reclaimable
       └──────────────────────┴─ unregistered ────────────────┘   (LRU)
 
     reclaimable ──prefix hit (acquire)──► live again, content intact
     reclaimable ──alloc under pressure──► evicted + unregistered
 
-Only *full* prompt pages are ever registered, and full pages are never
-written again (all writes are positional), so a reclaimable page's
-content is immutable and a prefix hit can revive it as-is.
+Lazy serving (``PagedPolicy`` with ``lazy_pages=True``, the default)
+allocates only the prompt's pages at admission and calls
+:meth:`BlockManager.try_grow` for one page whenever a request's decode
+crosses a page boundary; a low-watermark admission gate (default: 5% of
+capacity, at least one page) keeps enough headroom that live requests
+usually grow without conflict.  When growth still fails, the scheduler
+*preempts* the youngest decoding request: ``free`` drops its refcounts
+(shared prefix pages stay live for their other holders; its registered
+full prompt pages park reclaimable, content intact), and on re-admission
+the request recomputes by re-prefilling ``prompt + generated[:-1]``
+(the last generated token re-enters through the normal decode feed) —
+the prompt part usually a prefix hit against those reclaimable pages, so
+recompute costs roughly the generated tokens only.
+
+Only *full prefill pages* are ever registered — prompt pages normally,
+plus replayed generated-token pages after a preemption (still keyed by
+their exact tokens) — and full pages are never written again (all
+writes are positional), so a reclaimable page's content is immutable
+and a prefix hit can revive it as-is.
 
 Known scale limit: the index keys chains by their full parent-token
 tuple (exactness over compactness), so one cached L-token chain holds
@@ -97,6 +113,7 @@ class BlockManager:
         self._page_key: Dict[int, Tuple[TokenTuple, TokenTuple]] = {}
         self.peak_in_use = 0
         self.evictions = 0
+        self.grows = 0          # pages handed out by try_grow (lazy decode)
         # bumped on any state change that could alter a future alloc or
         # match — admission caches its failed attempt against this
         self.version = 0
@@ -164,6 +181,16 @@ class BlockManager:
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         self.version += 1
         return pages
+
+    def try_grow(self, rid: int) -> Optional[int]:
+        """One more page (refcount 1) for a live request whose decode is
+        about to cross a page boundary (lazy on-demand growth).  None
+        under pressure — the caller preempts instead of crashing."""
+        pages = self.alloc(1, rid)
+        if pages is None:
+            return None
+        self.grows += 1
+        return pages[0]
 
     def acquire(self, page: int, rid: Optional[int] = None) -> None:
         """Add a reference to a live or reclaimable page (prefix hit)."""
@@ -272,12 +299,14 @@ class EngineMetrics:
     cached_prompt_tokens: int = 0  # prompt tokens served from the prefix cache
     first_tokens: int = 0        # one per completed prefill (the TTFT token)
     decode_tokens: int = 0
+    preemptions: int = 0         # decoding requests evicted under pressure
     pages_in_use: int = 0
     peak_pages_in_use: int = 0
     cached_pages: int = 0        # reclaimable prefix-cache pages (ref 0)
     evictions: int = 0           # cached pages reclaimed under pressure
     queued: int = 0
     active: int = 0
+    peak_active: int = 0         # admitted concurrency high-water mark
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     _t_start: Optional[float] = None
     _t_last: Optional[float] = None
@@ -297,6 +326,7 @@ class EngineMetrics:
         self.ticks += 1
         self.queued = queued
         self.active = active
+        self.peak_active = max(self.peak_active, active)
         self.pages_in_use = pages_in_use
         self.peak_pages_in_use = max(self.peak_pages_in_use, pages_in_use)
         self.cached_pages = cached_pages
@@ -320,6 +350,8 @@ class EngineMetrics:
             "prefix_hit_rate": self.cached_prompt_tokens / max(prompt_toks, 1),
             "decode_tokens": self.decode_tokens,
             "generated_tokens": gen,
+            "preemptions": self.preemptions,
+            "peak_active": self.peak_active,
             "page_capacity": self.page_capacity,
             "pages_in_use": self.pages_in_use,
             "peak_pages_in_use": self.peak_pages_in_use,

@@ -43,19 +43,37 @@ supplies the cache layout and the model arithmetic, and a shared
                          park in an LRU list and are evicted under
                          pressure.
 
+    lazy growth + preemption (PagedPolicy, ``lazy_pages=True`` default)
+      Admission reserves only the *prompt's* pages (plus cached-prefix
+      refs) instead of ``ceil((prompt + max_new) / page_size)`` up
+      front; ``decode_tick`` calls ``BlockManager.try_grow`` for one
+      page whenever a request's next write crosses a page boundary.  A
+      low-watermark admission gate (``watermark`` fraction of capacity,
+      ≥1 page, waived when the pool is idle) keeps headroom so live
+      requests usually grow unopposed.  When growth still fails the
+      Scheduler *preempts the youngest decoding request*: its pages are
+      freed (full prompt pages stay in the prefix index, so re-admission
+      recomputes them through the prefix-hit path), its generated tokens
+      are kept, and it returns to the queue head; on re-admission it
+      re-prefills ``prompt + generated[:-1]`` and re-enters decode by
+      feeding ``generated[-1]`` — token streams are exactly preserved
+      (the sampler is deterministic per (seed, rid, step)).
+
 :class:`ServingEngine` (fixed-slot) and :class:`PagedServingEngine` are
 thin façades binding the Scheduler to one policy; both complete requests
 on max_new_tokens or eos and ``run`` raises :class:`SchedulerStallError`
 when ticks run out with work still pending (stalls fail loudly).
 
 Scheduling is deterministic (FCFS admission, lowest-rid prefill first,
-seats scanned in index order) so trace tests can assert exact
-interleavings.  ``trace`` records (tick, event, rid) tuples with events:
-admit / prefix_hit / prefill_chunk / first_token / decode / finish.
+seats scanned in index order, youngest-first preemption) so trace tests
+can assert exact interleavings.  ``trace`` records (tick, event, rid)
+tuples with events: admit / prefix_hit / prefill_chunk / first_token /
+decode / preempt / finish.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
@@ -66,7 +84,7 @@ import numpy as np
 
 from repro.models import model as M
 from repro.parallel.sharding import LogicalRules, SINGLE_DEVICE_RULES
-from repro.runtime.paged_kv import BlockManager, EngineMetrics
+from repro.runtime.paged_kv import BlockManager, EngineMetrics, PrefixMatch
 from repro.runtime.sampler import GREEDY, Sampler, SamplingParams
 
 
@@ -90,10 +108,23 @@ class Request:
     registered_pages: int = 0       # prompt pages published to the prefix index
     match_version: Optional[int] = None  # BlockManager.version at last failed
     #                                      admission attempt (re-match gate)
+    resume_tokens: Optional[np.ndarray] = None  # replay prefill source after
+    #                                             a preemption (prompt +
+    #                                             generated[:-1])
+    times_preempted: int = 0
     done: bool = False
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+
+    @property
+    def prefill_src(self) -> np.ndarray:
+        """Tokens the policy must (re)prefill: the prompt, or — after a
+        preemption — the prompt plus all generated tokens but the last
+        (the last one re-enters through the normal decode feed, so the
+        replayed KV and sampling steps line up exactly with an
+        uncontended run)."""
+        return self.prompt if self.resume_tokens is None else self.resume_tokens
 
 
 class Scheduler:
@@ -208,6 +239,26 @@ class Scheduler:
         self.metrics.completed += 1
         self.trace.append((self._tick, "finish", req.rid))
 
+    def preempt(self, req: Request) -> None:
+        """Evict a decoding request under memory pressure: the policy
+        frees its placement (``policy.preempt`` also stashes the replay
+        source), generated-so-far tokens are kept, and the request
+        returns to the queue *head* — re-admission re-prefills
+        ``prompt + generated``, cheap when the prefix index still holds
+        the prompt pages."""
+        if not req.generated:
+            raise ValueError(
+                f"cannot preempt request {req.rid} before its first "
+                "token; only decoding requests are preemptible (a "
+                "mid-prefill request has no tokens to replay)")
+        self.policy.preempt(req)
+        del self.seats[req.slot]
+        req.slot = None
+        self.queue.appendleft(req)
+        req.times_preempted += 1
+        self.metrics.preemptions += 1
+        self.trace.append((self._tick, "preempt", req.rid))
+
     # -- one engine tick -----------------------------------------------------
 
     def step(self):
@@ -246,7 +297,15 @@ class FixedSlotPolicy:
     whole-prompt prefill scattered into the slot.  Wastes
     ``max_len - len`` KV tokens per short request, but its per-request
     state is constant-size, so it covers SSM / encoder-decoder / frontend
-    archs and is the arithmetic oracle for the paged path."""
+    archs and is the arithmetic oracle for the paged path.
+
+    The cache carries one extra *scratch position* at index ``max_len``
+    (the fixed-slot analogue of the paged path's scratch page 0): idle
+    slots still ride through the batched ``decode_step``, and routing
+    their token-0 writes to the scratch position keeps them from
+    rewriting KV at whatever position the slot's previous occupant left
+    behind.  No live query ever attends to it (live positions are
+    < ``max_len`` and the causal mask drops keys beyond the query)."""
 
     def __init__(self, cfg, params, *, slots: int, max_len: int,
                  rules: LogicalRules, opts: Optional[M.RunOptions]):
@@ -256,8 +315,9 @@ class FixedSlotPolicy:
         self.max_len = max_len
         self.rules = rules
         self.opts = opts or M.RunOptions(q_chunk=min(max_len, 512))
-        self.cache = M.init_cache(cfg, slots, max_len, self.opts)
-        self.pos = jnp.zeros((slots,), jnp.int32)       # next write position
+        self.cache = M.init_cache(cfg, slots, max_len + 1, self.opts)
+        # next write position; max_len = scratch (slot idle)
+        self.pos = jnp.full((slots,), max_len, jnp.int32)
         self._decode = jax.jit(
             lambda p, c, t, q: M.decode_step(p, cfg, c, t, q, rules, self.opts))
         self._prefill = jax.jit(
@@ -288,22 +348,37 @@ class FixedSlotPolicy:
         return True                       # the seat is the only resource
 
     def release(self, req: Request) -> None:
-        pass                              # slot frees with the seat
+        # park the slot's write position on the scratch index so the idle
+        # slot's pass through the batched decode stops touching the KV
+        # its previous occupant wrote
+        self.pos = self.pos.at[req.slot].set(self.max_len)
+
+    def preempt(self, req: Request) -> None:
+        """Hook-surface parity with PagedPolicy (the fixed-slot engine
+        never preempts on its own — the seat is the only resource — but
+        ``Scheduler.preempt`` works against either policy): the slot goes
+        back to scratch and the request replays prompt + generated[:-1]
+        on re-admission."""
+        self.pos = self.pos.at[req.slot].set(self.max_len)
+        req.resume_tokens = np.concatenate(
+            [req.prompt, np.asarray(req.generated[:-1], np.int32)])
+        req.prefill_pos = 0
 
     def prefill_tick(self) -> None:
         """Whole-prompt prefill for every seat admitted this tick, in rid
         order (so the newly admitted request decodes in the same tick —
         the pre-refactor fixed-slot cadence)."""
         pending = sorted((r for r in self.sched.seats.values()
-                          if r.prefill_pos < len(r.prompt)),
+                          if r.prefill_pos < len(r.prefill_src)),
                          key=lambda r: r.rid)
         for req in pending:
             self._prefill_one(req)
 
     def _prefill_one(self, req: Request) -> None:
         slot = req.slot
-        P = len(req.prompt)
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        src = req.prefill_src
+        P = len(src)
+        batch = {"tokens": jnp.asarray(src, jnp.int32)[None]}
         if self.cfg.frontend == "vision":
             batch["patches"] = jnp.zeros(
                 (1, self.cfg.frontend_len, self.cfg.frontend_dim), jnp.float32)
@@ -312,10 +387,11 @@ class FixedSlotPolicy:
                 (1, self.cfg.encoder_len, self.cfg.frontend_dim), jnp.float32)
         logits, row_cache = self._prefill(self.params, batch)
 
-        # scatter the single-row cache into this slot's region
+        # scatter the single-row cache into this slot's region (the +1
+        # pads through the scratch position at index max_len)
         def place(full, row, k2):
             if k2 in ("k", "v"):                 # (G,1,P,KVH,hd) -> slot, pad seq
-                pad = self.max_len - row.shape[2]
+                pad = self.max_len + 1 - row.shape[2]
                 row = jnp.pad(row, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
                 return full.at[:, slot].set(row[:, 0])
             if k2 in ("ck", "cv", "conv", "ssm"):
@@ -328,7 +404,10 @@ class FixedSlotPolicy:
         self.pos = self.pos.at[slot].set(P)
         req.prefill_pos = P
         self.sched.metrics.prefill_tokens += P
-        self.sched._emit_first_token(req, logits[0, -1])
+        if req.resume_tokens is None:
+            self.sched._emit_first_token(req, logits[0, -1])
+        # else: replay after a preemption — the TTFT token was already
+        # emitted; decode resumes by feeding generated[-1]
 
     def decode_tick(self) -> None:
         """One token for every active slot (prefill completes in the
@@ -342,22 +421,30 @@ class FixedSlotPolicy:
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tok), self.pos)
         toks = sched._sample_decode_batch(logits[:, -1], list(sched.seats))
+        active = list(sched.seats.items())
         new_pos = self.pos
-        for slot, req in list(sched.seats.items()):
+        for slot, _ in active:
             new_pos = new_pos.at[slot].add(1)
-            sched._emit_decode_token(req, toks[slot])
+        # advance positions BEFORE emitting: a token that finishes its
+        # request triggers release(), whose scratch-position reset must
+        # not be clobbered by this tick's increment
         self.pos = new_pos
+        for slot, req in active:
+            sched._emit_decode_token(req, toks[slot])
 
 
 class PagedPolicy:
     """Paged-KV placement (see module docstring): shared page pool,
     chunked prefill, page-table decode, refcounted prefix caching with
-    copy-on-write of the last partially shared page."""
+    copy-on-write of the last partially shared page, and — with
+    ``lazy_pages`` (default) — on-demand page growth with
+    preempt-and-recompute under pressure."""
 
     def __init__(self, cfg, params, *, page_size: int, num_pages: int,
                  max_seats: int, max_seq_len: int, prefill_chunk: int,
                  rules: LogicalRules, opts: Optional[M.RunOptions],
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, lazy_pages: bool = True,
+                 watermark: float = 0.05):
         if not M.paged_cache_supported(cfg):
             raise ValueError(
                 f"{cfg.name}: paged KV needs a pure-attention decoder; "
@@ -373,6 +460,24 @@ class PagedPolicy:
 
         self.bm = BlockManager(num_pages, page_size, prefix_cache=prefix_cache)
         self.n_tables = max(1, -(-max_seq_len // page_size))
+        self.lazy = lazy_pages
+        # admission headroom so live requests usually grow unopposed
+        # (>=1 page whenever a watermark is requested; 0 disables the
+        # gate); waived when the pool is idle — a lone max-length prompt
+        # must still be startable
+        self.watermark_pages = (
+            max(1, math.ceil(watermark * self.bm.capacity))
+            if lazy_pages and watermark > 0 else 0)
+        if lazy_pages and self.n_tables > self.bm.capacity:
+            # liveness bound: any admitted request (total <= max_seq_len)
+            # must be completable with the whole pool to itself, or the
+            # preempt/recompute loop could never converge
+            raise ValueError(
+                f"lazy_pages needs the pool to cover one max-length "
+                f"request: max_seq_len={max_seq_len} spans "
+                f"{self.n_tables} pages > capacity {self.bm.capacity}; "
+                "raise num_pages, lower max_seq_len, or set "
+                "lazy_pages=False")
         self.cache = M.init_paged_cache(cfg, num_pages, page_size)
         self.page_table = np.zeros((max_seats, self.n_tables), np.int32)
         self.pos = np.zeros((max_seats,), np.int32)     # next write position
@@ -402,7 +507,10 @@ class PagedPolicy:
         if total > self.max_seq_len:
             raise ValueError(f"request needs {total} tokens > "
                              f"max_seq_len={self.max_seq_len}")
-        if self.bm.pages_needed(total) > self.bm.capacity:
+        if not self.lazy and self.bm.pages_needed(total) > self.bm.capacity:
+            # up-front reservation must fit the pool; in lazy mode the
+            # constructor's n_tables <= capacity bound already makes
+            # max_seq_len the per-request feasibility limit
             raise ValueError(f"request needs {self.bm.pages_needed(total)} "
                              f"pages > pool capacity {self.bm.capacity}")
 
@@ -413,25 +521,53 @@ class PagedPolicy:
         # prefix match until the pool/index actually changed
         if req.match_version == self.bm.version:
             return False
-        need = self.bm.pages_needed(len(req.prompt) + req.max_new_tokens)
-        match = self.bm.match_prefix(req.prompt)
+        src = req.prefill_src
+        if self.lazy:
+            # reserve only the prompt's pages; decode grows on demand.
+            # keep watermark headroom unless the pool is idle
+            need = self.bm.pages_needed(len(src))
+            gate = self.watermark_pages if self.sched.seats else 0
+        else:
+            need = self.bm.pages_needed(len(src) + req.max_new_tokens)
+            gate = 0
+        match = self.bm.match_prefix(src)
         # feasibility before any side effect: acquiring a reclaimable
-        # matched page consumes one allocatable slot, so a starved head
-        # request must not churn refcounts/LRU order every tick
-        reclaimed = sum(1 for pg in match.pages if self.bm.refcount(pg) == 0)
-        if not self.bm.can_alloc(need - len(match.pages) + reclaimed):
-            req.match_version = self.bm.version
-            return False
-        for pg in match.pages:                   # pin shares before alloc can
-            self.bm.acquire(pg, req.rid)         # evict them
-        fresh = self.bm.alloc(need - len(match.pages), req.rid)
+        # matched (or CoW-source) page consumes one allocatable slot, so
+        # a starved head request must not churn refcounts/LRU order
+        # every tick
+        pinned = list(match.pages)
+        if match.cow_src is not None:
+            pinned.append(match.cow_src)
+        reclaimed = sum(1 for pg in pinned if self.bm.refcount(pg) == 0)
+        if not self.bm.can_alloc(need - len(match.pages) + reclaimed + gate):
+            if match.cow_src is not None:
+                # the CoW transient (source + copy live at once) can be
+                # what doesn't fit; forgo the partial-page match rather
+                # than defer — the partial page is recomputed from
+                # tokens, full-page shares are kept
+                match = PrefixMatch(match.pages, None,
+                                    len(match.pages) * self.page_size)
+                pinned = list(match.pages)
+                reclaimed = sum(1 for pg in pinned
+                                if self.bm.refcount(pg) == 0)
+            if not self.bm.can_alloc(need - len(match.pages)
+                                     + reclaimed + gate):
+                req.match_version = self.bm.version
+                return False
+        for pg in pinned:                        # pin shares AND the CoW
+            self.bm.acquire(pg, req.rid)         # source before alloc can
+        fresh = self.bm.alloc(need - len(match.pages), req.rid)  # evict them
         if fresh is None:                        # unreachable after the guard
-            self.bm.free(match.pages)
+            self.bm.free(pinned)
             return False
         if match.cow_src is not None:
             # the partially matched page: copy, then own the copy — its
-            # tail will be overwritten with this request's own tokens
+            # tail will be overwritten with this request's own tokens.
+            # The pin above keeps the source out of alloc's reach (it
+            # could otherwise be evicted and handed back as fresh[0],
+            # self-copying a donated buffer); drop it once copied
             self.cache = self._cow_fn(self.cache, match.cow_src, fresh[0])
+            self.bm.free([match.cow_src])
         req.pages = match.pages + fresh
         req.prefill_pos = req.cached_tokens = match.n_cached
         req.registered_pages = len(match.pages)
@@ -446,20 +582,40 @@ class PagedPolicy:
         self.page_table[req.slot] = 0
         self.pos[req.slot] = 0
 
+    def preempt(self, req: Request) -> None:
+        """Free the request's placement for replay: refcounts drop
+        (shared prefix pages stay live for their other holders;
+        registered full prompt pages park reclaimable, so the
+        re-admission prefix match revives them), and the request will
+        re-prefill ``prompt + generated[:-1]`` before feeding
+        ``generated[-1]`` back through the normal decode path."""
+        self.bm.free(req.pages)
+        self.page_table[req.slot] = 0
+        self.pos[req.slot] = 0
+        req.resume_tokens = np.concatenate(
+            [req.prompt, np.asarray(req.generated[:-1], np.int32)])
+        req.pages = []
+        req.prefill_pos = 0
+        req.cached_tokens = 0
+        req.registered_pages = 0
+        req.match_version = None
+
     # -- prefill / decode ------------------------------------------------------
 
     def prefill_tick(self) -> None:
         """One prompt chunk for the oldest mid-prefill request (chunked
         prefill: long prompts share the engine with everyone's decode).
-        Requests with a prefix-cache hit start at ``cached_tokens``."""
+        Requests with a prefix-cache hit start at ``cached_tokens``;
+        preempted requests replay ``prompt + generated[:-1]``."""
         cands = [r for r in self.sched.seats.values()
-                 if r.prefill_pos < len(r.prompt)]
+                 if r.prefill_pos < len(r.prefill_src)]
         if not cands:
             return
         req = min(cands, key=lambda r: r.rid)
         seat = req.slot
+        src = req.prefill_src
         start = req.prefill_pos
-        chunk = req.prompt[start:start + self.prefill_chunk]
+        chunk = src[start:start + self.prefill_chunk]
         c = len(chunk)
         tok = np.zeros((1, self.prefill_chunk), np.int32)
         tok[0, :c] = chunk
@@ -472,27 +628,63 @@ class PagedPolicy:
         self.sched.metrics.prefill_tokens += c
         self.sched.trace.append((self.sched._tick, "prefill_chunk", req.rid))
         self._register_full_pages(req)
-        if req.prefill_pos == len(req.prompt):
-            self.pos[seat] = len(req.prompt)
-            self.sched._emit_first_token(req, logits[0, c - 1])
+        if req.prefill_pos == len(src):
+            self.pos[seat] = len(src)
+            if req.resume_tokens is None:
+                self.sched._emit_first_token(req, logits[0, c - 1])
+            # else: replay — TTFT token already emitted before the
+            # preemption; decode resumes by feeding generated[-1]
 
     def _register_full_pages(self, req: Request) -> None:
-        """Publish every page now fully covered by prompt tokens to the
+        """Publish every page now fully covered by prefill tokens to the
         prefix index (idempotent for pages the request shares)."""
         if not self.bm.prefix_cache:
             return
+        src = req.prefill_src
         full = req.prefill_pos // self.page_size
         while req.registered_pages < full:
             i = req.registered_pages
-            self.bm.register_prefix(req.prompt[:(i + 1) * self.page_size],
+            self.bm.register_prefix(src[:(i + 1) * self.page_size],
                                     req.pages[i])
             req.registered_pages += 1
 
-    def decode_tick(self) -> None:
-        """One token for every seat whose prefill is complete."""
+    def _decoding_seats(self) -> List[int]:
+        return [s for s, r in self.sched.seats.items()
+                if r.prefill_pos >= len(r.prefill_src)]
+
+    def _grow_tick(self) -> None:
+        """Lazy mode: hand each decoding seat the page its next write
+        needs (one page per boundary crossing), oldest request first.
+        When the pool cannot grow, preempt the youngest decoding request
+        — possibly the grower itself — until the allocation succeeds or
+        the grower is gone."""
         sched = self.sched
-        decoding = [s for s, r in sched.seats.items()
-                    if r.prefill_pos >= len(r.prompt)]
+        for s in sorted(self._decoding_seats(),
+                        key=lambda s: sched.seats[s].rid):
+            req = sched.seats.get(s)
+            if req is None:                  # preempted for an older seat
+                continue
+            if self.pos[s] < len(req.pages) * self.page_size:
+                continue                     # next write is covered
+            pg = self.bm.try_grow(req.rid)
+            while pg is None:
+                victims = [sched.seats[v] for v in self._decoding_seats()]
+                victim = max(victims, key=lambda r: r.rid)
+                sched.preempt(victim)        # youngest decoding request
+                if victim is req:
+                    break                    # grower evicted itself
+                pg = self.bm.try_grow(req.rid)
+            if pg is not None:
+                self.page_table[s, len(req.pages)] = pg
+                req.pages.append(pg)
+
+    def decode_tick(self) -> None:
+        """One token for every seat whose prefill is complete (growing
+        page tables first in lazy mode)."""
+        sched = self.sched
+        if self.lazy:
+            self._grow_tick()
+        decoding = self._decoding_seats()
         if not decoding:
             return
         tok = np.zeros((self.max_seats, 1), np.int32)
@@ -553,7 +745,12 @@ class PagedServingEngine(Scheduler):
     """Paged-KV continuous-batching engine: the Scheduler bound to
     :class:`PagedPolicy` (shared page pool, chunked prefill, refcounted
     prefix caching — ``prefix_cache=False`` disables sharing for A/B
-    comparisons)."""
+    comparisons).  ``lazy_pages`` (default True) reserves only prompt
+    pages at admission and grows on demand, preempting the youngest
+    decoding request (recompute-on-readmission) under page pressure;
+    ``lazy_pages=False`` restores up-front full reservation.
+    ``watermark`` is the lazy admission gate's free-page headroom as a
+    fraction of pool capacity (≥1 page; waived on an idle pool)."""
 
     default_max_ticks = 100_000
 
@@ -563,12 +760,14 @@ class PagedServingEngine(Scheduler):
                  rules: LogicalRules = SINGLE_DEVICE_RULES,
                  opts: Optional[M.RunOptions] = None,
                  sampler: Optional[Sampler] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, lazy_pages: bool = True,
+                 watermark: float = 0.05):
         policy = PagedPolicy(cfg, params, page_size=page_size,
                              num_pages=num_pages, max_seats=max_seats,
                              max_seq_len=max_seq_len,
                              prefill_chunk=prefill_chunk, rules=rules,
-                             opts=opts, prefix_cache=prefix_cache)
+                             opts=opts, prefix_cache=prefix_cache,
+                             lazy_pages=lazy_pages, watermark=watermark)
         super().__init__(policy, max_seats=max_seats, sampler=sampler,
                          page_capacity=policy.bm.capacity)
         self.cfg = cfg

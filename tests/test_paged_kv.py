@@ -214,12 +214,22 @@ def test_pages_freed_on_completion_and_queueing_not_crashing(engine_setup):
 
 def test_oversized_request_rejected(engine_setup):
     cfg, params = engine_setup
+    # up-front reservation: per-request max_seq_len bound AND pool check
     eng = PagedServingEngine(cfg, params, page_size=8, num_pages=4,
-                             max_seats=2, max_seq_len=40)
+                             max_seats=2, max_seq_len=40, lazy_pages=False)
     with pytest.raises(ValueError):
         eng.submit(np.arange(44, dtype=np.int32), max_new_tokens=4)  # > max_seq_len
     with pytest.raises(ValueError):
         eng.submit(np.arange(28, dtype=np.int32), max_new_tokens=4)  # > pool
+    # lazy growth: max_seq_len is the only per-request bound — a pool too
+    # small to cover one max-length request is rejected at construction
+    with pytest.raises(ValueError):
+        PagedServingEngine(cfg, params, page_size=8, num_pages=4,
+                           max_seats=2, max_seq_len=40)
+    lazy = PagedServingEngine(cfg, params, page_size=8, num_pages=6,
+                              max_seats=2, max_seq_len=40)
+    with pytest.raises(ValueError):
+        lazy.submit(np.arange(44, dtype=np.int32), max_new_tokens=4)
     with pytest.raises(ValueError):
         PagedServingEngine(reduced_config(get_config("mamba2-130m")),
                            params, page_size=8, num_pages=4)  # ssm: unsupported

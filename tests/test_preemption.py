@@ -1,0 +1,147 @@
+"""Preemption-and-recompute: when on-demand growth fails, the Scheduler
+evicts the youngest decoding request (``preempt`` trace event +
+``EngineMetrics.preemptions``), its pages return to the pool (registered
+prompt pages park reclaimable in the prefix index), it requeues at the
+queue head, and re-admission replays ``prompt + generated`` with outputs
+token-identical to an uncontended run — with prefix caching on or off,
+greedy or stochastic sampling."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models import model as M
+from repro.runtime.sampler import SamplingParams
+from repro.runtime.serving import PagedServingEngine, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config(get_config("qwen3-1.7b"))
+    params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+KW = dict(page_size=4, max_seats=2, max_seq_len=24, prefill_chunk=8)
+
+
+def _reqs(cfg):
+    return [((np.arange(8, dtype=np.int32) * 3) % cfg.vocab_size, 10),
+            ((np.arange(8, dtype=np.int32) * 7) % cfg.vocab_size, 10)]
+
+
+def _run(cfg, params, num_pages, *, sampling=None, **over):
+    eng = PagedServingEngine(cfg, params, num_pages=num_pages,
+                             **{**KW, **over})
+    for p, g in _reqs(cfg):
+        eng.submit(p, max_new_tokens=g, sampling=sampling)
+    eng.run()
+    return eng, {r.rid: r.generated for r in eng.finished}
+
+
+def events(eng, kind, rid):
+    return [t for (t, k, r) in eng.trace if k == kind and r == rid]
+
+
+def test_growth_failure_preempts_youngest_and_replays_exactly(setup):
+    cfg, params = setup
+    big, ref = _run(cfg, params, 32)
+    assert big.metrics.preemptions == 0
+
+    # capacity 6: two 2-page prompts decode concurrently, each growing
+    # toward 5 pages — the second boundary crossing cannot be satisfied
+    tight, out = _run(cfg, params, 7)
+    assert out == ref                          # token-identical replay
+    assert tight.metrics.preemptions >= 1
+    assert tight.metrics.snapshot()["preemptions"] == \
+        tight.metrics.preemptions
+    preempted = {r for (_, k, r) in tight.trace if k == "preempt"}
+    assert preempted == {1}                    # youngest decoding request
+    for rid in preempted:
+        req = next(r for r in tight.finished if r.rid == rid)
+        assert req.times_preempted >= 1
+        assert len(req.generated) == req.max_new_tokens
+        # re-admitted after the preemption (queue head, so next chance)
+        admits = events(tight, "admit", rid)
+        assert len(admits) == req.times_preempted + 1
+        assert min(events(tight, "preempt", rid)) >= admits[0]
+        # exactly one TTFT emission despite the replayed prefill
+        assert len(events(tight, "first_token", rid)) == 1
+    # pool fully drained afterwards
+    assert tight.bm.in_use == 0
+    assert tight.bm.available == tight.bm.capacity
+
+
+def test_preempted_readmission_recomputes_through_prefix_hits(setup):
+    cfg, params = setup
+    tight, _ = _run(cfg, params, 7)
+    (rid,) = {r for (_, k, r) in tight.trace if k == "preempt"}
+    t_pre = events(tight, "preempt", rid)[0]
+    hits = events(tight, "prefix_hit", rid)
+    # the victim's full prompt pages stayed registered, so its replay
+    # starts from the cache instead of re-prefilling from scratch
+    assert any(t >= t_pre for t in hits)
+    req = next(r for r in tight.finished if r.rid == rid)
+    assert req.resume_tokens is not None
+    assert len(req.resume_tokens) > len(req.prompt)    # generated replayed
+
+
+def test_preemption_exact_without_prefix_cache(setup):
+    cfg, params = setup
+    _, ref = _run(cfg, params, 32)
+    tight, out = _run(cfg, params, 7, prefix_cache=False)
+    assert tight.metrics.preemptions >= 1
+    assert out == ref
+
+
+def test_preemption_exact_with_stochastic_sampling(setup):
+    """The sampler is deterministic per (seed, rid, step): replayed
+    requests resume at their step counter, so even temperature > 0 runs
+    are preemption-invariant."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.8, top_p=0.9, seed=11)
+    _, ref = _run(cfg, params, 32, sampling=sp)
+    tight, out = _run(cfg, params, 7, sampling=sp)
+    assert tight.metrics.preemptions >= 1
+    assert out == ref
+
+
+def test_preempt_rejects_mid_prefill_requests(setup):
+    """Only decoding requests are preemptible: a request with no tokens
+    yet has nothing to replay, so preempting it must fail loudly."""
+    cfg, params = setup
+    eng = PagedServingEngine(cfg, params, page_size=4, num_pages=16,
+                             max_seats=1, max_seq_len=24, prefill_chunk=4)
+    eng.submit(np.arange(12, dtype=np.int32), max_new_tokens=4)
+    eng.step()                                # one 4-token chunk of 12
+    req = eng.seats[0]
+    assert req.prefill_pos < len(req.prompt) and not req.generated
+    with pytest.raises(ValueError, match="preempt"):
+        eng.preempt(req)
+    assert eng.seats[0] is req                # untouched, still seated
+    assert len(eng.run()) == 1
+
+
+def test_scheduler_preempt_hook_works_on_fixed_slot(setup):
+    """`Scheduler.preempt` is policy-agnostic: the fixed-slot engine
+    never preempts on its own, but an explicit preemption mid-decode
+    parks the slot on scratch, requeues the request, and the replay
+    reproduces the solo run exactly."""
+    cfg, params = setup
+    solo = ServingEngine(cfg, params, slots=1, max_len=32)
+    solo.submit(np.arange(6, dtype=np.int32), max_new_tokens=8)
+    ref = solo.run()[0].generated
+
+    eng = ServingEngine(cfg, params, slots=1, max_len=32)
+    eng.submit(np.arange(6, dtype=np.int32), max_new_tokens=8)
+    for _ in range(3):
+        eng.step()
+    req = eng.seats[0]
+    assert 1 < len(req.generated) < 8
+    eng.preempt(req)
+    assert not eng.seats and eng.queue[0] is req
+    assert int(np.asarray(eng.pos)[0]) == 32           # slot on scratch
+    done = eng.run()
+    assert done[0].generated == ref
+    assert eng.metrics.preemptions == 1
+    assert req.times_preempted == 1

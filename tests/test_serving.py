@@ -116,3 +116,44 @@ def test_run_raises_on_stall_paged(engine_setup):
     with pytest.raises(SchedulerStallError) as ei:
         eng.run(max_ticks=1)
     assert "queued" in str(ei.value)
+
+
+def test_fixed_slot_release_parks_pos_on_scratch(engine_setup):
+    """release() must reset the slot's write position to the scratch
+    index (max_len); it used to stay wherever the finished request left
+    it, so idle slots kept rewriting KV at stale positions."""
+    cfg, params = engine_setup
+    eng = ServingEngine(cfg, params, slots=2, max_len=32)
+    eng.submit(np.arange(6, dtype=np.int32), max_new_tokens=3)
+    eng.run()
+    assert [int(p) for p in np.asarray(eng.pos)] == [32, 32]
+    # a slot that finishes mid-tick is also parked (the tick's position
+    # advance must not clobber the release reset)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2)
+    eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=6)
+    eng.run()
+    assert [int(p) for p in np.asarray(eng.pos)] == [32, 32]
+
+
+def test_fixed_slot_idle_writes_go_to_scratch_position(engine_setup):
+    """A slot whose request finished holds stale KV while its sibling
+    decodes on; its live region [0:max_len] must stay byte-identical —
+    the idle slot's batched-decode writes are routed to the scratch
+    position at index max_len instead of its stale write position."""
+    cfg, params = engine_setup
+    eng = ServingEngine(cfg, params, slots=2, max_len=32)
+    eng.submit(np.arange(6, dtype=np.int32), max_new_tokens=2)       # slot 0
+    eng.submit(np.arange(9, dtype=np.int32) + 20, max_new_tokens=10)  # slot 1
+    eng.step()
+    # the short request prefilled + decoded to completion in tick 1:
+    # slot 0 is now idle with its KV and (pre-fix) stale position intact
+    assert 0 not in eng.seats and 1 in eng.seats
+    snap = {pos: {k: np.asarray(eng.cache[pos][k])[:, 0, :32].copy()
+                  for k in ("k", "v") if k in eng.cache[pos]}
+            for pos in eng.cache}
+    for _ in range(4):
+        eng.step()
+    for pos, ent in snap.items():
+        for k, before in ent.items():
+            after = np.asarray(eng.cache[pos][k])[:, 0, :32]
+            assert np.array_equal(before, after), (pos, k)
