@@ -5,10 +5,15 @@ requests finish (no head-of-line blocking on the longest generation).
 The fixed-slot engine runs through the same unified ``Scheduler`` and
 shared sampler as the paged engine, so the sampling flags behave
 identically here (default greedy; ``--temperature`` > 0 draws from the
-per-request deterministic stream).
+per-request deterministic stream), and so do the SLO flags:
+``--admission slo`` reorders the queue by priority class + earliest
+deadline, ``--mixed-classes`` cycles each request through
+premium/standard/batch to make the reordering visible in a single run.
 
   PYTHONPATH=src python examples/continuous_batching.py --arch qwen3-1.7b \
       --temperature 0.8 --top-p 0.9 --seed 7
+  PYTHONPATH=src python examples/continuous_batching.py --slots 2 \
+      --mixed-classes --admission slo
 """
 import argparse
 import time
@@ -17,7 +22,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.launch.serve import add_sampling_args, sampling_from_args
+from repro.launch.serve import (add_sampling_args, add_slo_args,
+                                sampling_from_args)
 from repro.models import model as M
 from repro.runtime.serving import ServingEngine
 
@@ -27,21 +33,30 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--mixed-classes", action="store_true",
+                    help="cycle requests through premium/standard/batch "
+                         "instead of a single --priority class")
     add_sampling_args(ap)
+    add_slo_args(ap)
     args = ap.parse_args()
     sampling = sampling_from_args(args)
 
     cfg = reduced_config(get_config(args.arch))
     params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, slots=args.slots, max_len=96)
+    eng = ServingEngine(cfg, params, slots=args.slots, max_len=96,
+                        admission=args.admission,
+                        aging_ticks=args.aging_ticks)
 
+    classes = ("premium", "standard", "batch")
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))
         gen = int(rng.integers(4, 20))
+        prio = classes[i % 3] if args.mixed_classes else args.priority
         eng.submit(rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-                   max_new_tokens=gen, eos_id=args.eos_id, sampling=sampling)
+                   max_new_tokens=gen, eos_id=args.eos_id, sampling=sampling,
+                   priority=prio, deadline_ms=args.deadline_ms)
     done = eng.run()
     wall = time.perf_counter() - t0
 
@@ -51,7 +66,12 @@ def main():
     for r in done[:5]:
         ttft = (r.t_first_token - r.t_submit) * 1e3
         print(f"  req{r.rid}: prompt={len(r.prompt):2d} "
-              f"gen={len(r.generated):2d} ttft={ttft:6.0f}ms")
+              f"gen={len(r.generated):2d} class={r.priority:8s} "
+              f"ttft={ttft:6.0f}ms")
+    for cls, cm in eng.metrics.snapshot()["classes"].items():
+        print(f"  class {cls}: ttft_avg {cm['ttft_avg_s'] * 1e3:.0f} ms "
+              f"(p95 {cm['ttft_p95_s'] * 1e3:.0f} ms), "
+              f"{cm['completed']:.0f} completed")
 
 
 if __name__ == "__main__":

@@ -8,14 +8,21 @@ metrics.  Sampling flags (``--temperature/--top-k/--top-p/--seed``) and
 ``--eos-id`` flow through the shared ``runtime.sampler`` on both paths;
 the default is greedy.
 
+SLO flags (``--priority/--deadline-ms/--admission/--aging-ticks``) tag
+every request with a priority class and switch the scheduler queue from
+FCFS to priority + earliest-deadline-first admission — see
+docs/serving.md.
+
   PYTHONPATH=src python examples/serve_lm.py --arch gemma3-12b --gen 24
   PYTHONPATH=src python examples/serve_lm.py --engine paged \
       --arch qwen3-1.7b --requests 8 --temperature 0.7 --top-k 40
+  PYTHONPATH=src python examples/serve_lm.py --engine paged \
+      --admission slo --priority premium --deadline-ms 2000
 """
 import argparse
 
-from repro.launch.serve import (add_sampling_args, sampling_from_args,
-                                serve, serve_paged)
+from repro.launch.serve import (add_sampling_args, add_slo_args,
+                                sampling_from_args, serve, serve_paged)
 
 
 def main():
@@ -40,6 +47,7 @@ def main():
     ap.add_argument("--watermark", type=float, default=0.05,
                     help="lazy admission free-page headroom fraction")
     add_sampling_args(ap)
+    add_slo_args(ap)
     args = ap.parse_args()
     sampling = sampling_from_args(args)
     if args.engine == "paged":
@@ -49,7 +57,10 @@ def main():
                         max_seq_len=args.max_seq_len,
                         prompt_len=args.prompt_len,
                         lazy_pages=args.lazy_pages,
-                        watermark=args.watermark)
+                        watermark=args.watermark,
+                        priority=args.priority, deadline_ms=args.deadline_ms,
+                        admission=args.admission,
+                        aging_ticks=args.aging_ticks)
         m = r["metrics"]
         print(f"served:  {m['completed']:.0f} requests, "
               f"{m['generated_tokens']:.0f} tokens "
@@ -61,6 +72,12 @@ def main():
               f"(util {m['peak_page_utilization']:.2f}, "
               f"prefix hits {m['prefix_hit_rate']:.2f}, "
               f"preemptions {m['preemptions']:.0f})")
+        for cls, cm in m["classes"].items():
+            print(f"classes: {cls}: ttft_avg "
+                  f"{cm['ttft_avg_s'] * 1e3:.0f} ms, p95 "
+                  f"{cm['ttft_p95_s'] * 1e3:.0f} ms, "
+                  f"deadline misses {cm['deadline_misses']:.0f}/"
+                  f"{cm['deadline_requests']:.0f}")
         for req in r["finished"][:4]:
             print(f"  request[{req.rid}] -> {req.generated}")
         return

@@ -111,7 +111,10 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
                 prefix_cache: bool = True,
                 max_seq_len: Optional[int] = None,
                 prompt_len: Optional[int] = None,
-                lazy_pages: bool = True, watermark: float = 0.05):
+                lazy_pages: bool = True, watermark: float = 0.05,
+                priority: str = "standard",
+                deadline_ms: Optional[float] = None,
+                admission: str = "fcfs", aging_ticks: int = 64):
     """Drive the paged engine over a request stream.
 
     ``max_seq_len`` bounds prompt + generation per request and defaults
@@ -119,7 +122,14 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
     every prompt's length; when None, lengths are sampled to fit
     ``max_seq_len`` minus the generation budget.  Infeasible
     combinations raise here with the offending flags named instead of
-    crashing inside ``submit``."""
+    crashing inside ``submit``.
+
+    ``admission`` picks the scheduler queue policy (``fcfs`` default,
+    ``slo`` = priority + earliest-deadline-first with an ``aging_ticks``
+    anti-starvation bound); ``priority`` (premium/standard/batch) and
+    ``deadline_ms`` (TTFT deadline) are applied to every submitted
+    request — one-class streams are plumbing demos; see
+    benchmarks/serving_paged.py workload 4 for a mixed-class stream."""
     if max_seq_len is None:
         max_seq_len = (prompt_len if prompt_len else 3 * page_size) + gen
     if prompt_len is not None and prompt_len + gen > max_seq_len:
@@ -140,14 +150,16 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
                              max_seq_len=max_seq_len,
                              prefill_chunk=prefill_chunk,
                              prefix_cache=prefix_cache,
-                             lazy_pages=lazy_pages, watermark=watermark)
+                             lazy_pages=lazy_pages, watermark=watermark,
+                             admission=admission, aging_ticks=aging_ticks)
     rng = np.random.default_rng(seed)
     for _ in range(requests):
         plen = (prompt_len if prompt_len
                 else int(rng.integers(1, max_seq_len - gen)))
         eng.submit(rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
                    max_new_tokens=int(rng.integers(2, gen + 1)),
-                   eos_id=eos_id, sampling=sampling)
+                   eos_id=eos_id, sampling=sampling,
+                   priority=priority, deadline_ms=deadline_ms)
     done = eng.run()
     return {"finished": done, "metrics": eng.metrics.snapshot()}
 
@@ -164,7 +176,26 @@ def add_sampling_args(ap: argparse.ArgumentParser) -> None:
                     help="base seed for params init and sampling streams")
 
 
+def add_slo_args(ap: argparse.ArgumentParser) -> None:
+    """Shared CLI SLO-class flags (also used by the examples): request
+    priority/deadline plus the scheduler admission policy."""
+    ap.add_argument("--priority", choices=("premium", "standard", "batch"),
+                    default="standard",
+                    help="SLO class applied to every submitted request")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="TTFT deadline per request in ms (EDF ordering "
+                         "under --admission slo; misses are counted and "
+                         "traced under either policy)")
+    ap.add_argument("--admission", choices=("fcfs", "slo"), default="fcfs",
+                    help="queue policy: fcfs (default) or slo = priority + "
+                         "earliest-deadline-first with aging")
+    ap.add_argument("--aging-ticks", type=int, default=64,
+                    help="slo anti-starvation bound: a queued request "
+                         "gains one priority class per this many ticks")
+
+
 def sampling_from_args(args) -> SamplingParams:
+    """Build :class:`SamplingParams` from ``add_sampling_args`` flags."""
     return SamplingParams(temperature=args.temperature, top_k=args.top_k,
                           top_p=args.top_p, seed=args.seed)
 
@@ -195,6 +226,7 @@ def main():
                     help="lazy admission gate: free-page headroom kept at "
                          "admission, as a fraction of pool capacity")
     add_sampling_args(ap)
+    add_slo_args(ap)
     args = ap.parse_args()
     sampling = sampling_from_args(args)
     if args.engine == "paged":
@@ -204,7 +236,10 @@ def main():
                         prefix_cache=not args.no_prefix_cache,
                         max_seq_len=args.max_seq_len,
                         prompt_len=args.prompt_len,
-                        lazy_pages=args.lazy_pages, watermark=args.watermark)
+                        lazy_pages=args.lazy_pages, watermark=args.watermark,
+                        priority=args.priority, deadline_ms=args.deadline_ms,
+                        admission=args.admission,
+                        aging_ticks=args.aging_ticks)
         m = r["metrics"]
         print(f"[serve.paged] {m['completed']:.0f} requests "
               f"{m['generated_tokens']:.0f} tokens in {m['wall_s'] * 1e3:.0f}ms "
@@ -213,6 +248,13 @@ def main():
               f"peak_page_util={m['peak_page_utilization']:.2f} "
               f"prefix_hit_rate={m['prefix_hit_rate']:.2f} "
               f"preemptions={m['preemptions']:.0f}")
+        for cls, cm in m["classes"].items():
+            print(f"[serve.paged]   class={cls} "
+                  f"completed={cm['completed']:.0f} "
+                  f"ttft_avg={cm['ttft_avg_s'] * 1e3:.0f}ms "
+                  f"ttft_p95={cm['ttft_p95_s'] * 1e3:.0f}ms "
+                  f"preemptions={cm['preemptions']:.0f} "
+                  f"deadline_misses={cm['deadline_misses']:.0f}")
         print("[serve.paged] sample tokens:",
               r["finished"][0].generated[:12])
         return

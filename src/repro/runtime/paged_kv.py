@@ -50,6 +50,9 @@ O(L^2 / page_size) ints of bookkeeping.  Fine for the prompt lengths
 this repo serves today; re-keying children by parent page id (with
 subtree invalidation on eviction) is the planned fix for multi-k-token
 system prompts — see ROADMAP "Serving".
+
+The page lifecycle, prefix-cache CoW and the scheduler that drives all
+of this are documented end-to-end in docs/serving.md.
 """
 from __future__ import annotations
 
@@ -161,9 +164,17 @@ class BlockManager:
     # -- alloc / share / release ----------------------------------------------
 
     def alloc(self, n: int, rid: int) -> Optional[List[int]]:
-        """Take ``n`` fresh pages (refcount 1) for request ``rid``; evicts
-        LRU reclaimable cached pages under pressure.  None if not enough
-        (callers queue instead of crashing)."""
+        """Take ``n`` fresh pages for request ``rid``.
+
+        Args:
+          n: pages wanted (0 returns an empty list).
+          rid: requesting id, recorded as the debugging ``owner``.
+
+        Returns:
+          ``n`` page ids, each at refcount 1 — LRU reclaimable cached
+          pages are evicted (and unregistered) under pressure — or
+          None when fewer than ``n`` are available: callers queue
+          instead of crashing, and no state changes on None."""
         if not self.can_alloc(n):
             return None
         pages = []
@@ -184,8 +195,11 @@ class BlockManager:
 
     def try_grow(self, rid: int) -> Optional[int]:
         """One more page (refcount 1) for a live request whose decode is
-        about to cross a page boundary (lazy on-demand growth).  None
-        under pressure — the caller preempts instead of crashing."""
+        about to cross a page boundary (lazy on-demand growth).
+
+        Returns:
+          The page id (the ``grows`` counter increments), or None under
+          pressure — the caller preempts instead of crashing."""
         pages = self.alloc(1, rid)
         if pages is None:
             return None
@@ -193,7 +207,15 @@ class BlockManager:
         return pages[0]
 
     def acquire(self, page: int, rid: Optional[int] = None) -> None:
-        """Add a reference to a live or reclaimable page (prefix hit)."""
+        """Add a reference to a live or reclaimable page (prefix hit).
+
+        Args:
+          page: page id to share; a reclaimable page revives with its
+              content intact.
+          rid: recorded as the debugging ``owner`` when reviving.
+
+        Raises:
+          ValueError: ``page`` is neither live nor reclaimable."""
         if page in self._ref:
             self._ref[page] += 1
         elif page in self._reclaim:
@@ -209,7 +231,11 @@ class BlockManager:
     def free(self, pages: List[int]) -> None:
         """Drop one reference per page.  At refcount 0 a page returns to
         the free list — or to the reclaimable LRU list if it is registered
-        in the prefix index (its content stays revivable)."""
+        in the prefix index (its content stays revivable).
+
+        Raises:
+          ValueError: a page's refcount is already 0 (double free /
+              foreign page)."""
         for pg in pages:
             if self._ref.get(pg, 0) <= 0:
                 raise ValueError(f"double free / foreign page {pg}")
@@ -285,11 +311,25 @@ class BlockManager:
             del self._children[parent]
 
 
+def _quantile(xs: List[float], q: float) -> float:
+    """Nearest-rank quantile of ``xs`` (0.0 when empty) — enough for
+    the per-class TTFT p50/p95 the serving metrics report without
+    pulling numpy into this module."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    i = max(0, min(len(s) - 1, math.ceil(q * len(s)) - 1))
+    return s[i]
+
+
 @dataclasses.dataclass
 class EngineMetrics:
     """Counters the serving engine updates in place; ``snapshot`` derives
     the headline serving numbers (TTFT, tokens/s, page utilization,
-    prefix-hit rate)."""
+    prefix-hit rate) plus a per-priority-class breakdown (TTFT
+    percentiles, preemption counts, deadline-miss rate, peak pages) —
+    the observable side of the SLO classes described in
+    docs/serving.md."""
     page_capacity: int = 0
     submitted: int = 0
     admitted: int = 0
@@ -308,6 +348,20 @@ class EngineMetrics:
     active: int = 0
     peak_active: int = 0         # admitted concurrency high-water mark
     ttft_s: List[float] = dataclasses.field(default_factory=list)
+    # per-priority-class accounting (keys are class names; only classes
+    # actually seen appear — a uniform-priority run reports one class)
+    ttft_s_by_class: Dict[str, List[float]] = \
+        dataclasses.field(default_factory=dict)
+    completed_by_class: Dict[str, int] = \
+        dataclasses.field(default_factory=dict)
+    preemptions_by_class: Dict[str, int] = \
+        dataclasses.field(default_factory=dict)
+    deadline_requests_by_class: Dict[str, int] = \
+        dataclasses.field(default_factory=dict)
+    deadline_misses_by_class: Dict[str, int] = \
+        dataclasses.field(default_factory=dict)
+    peak_pages_by_class: Dict[str, int] = \
+        dataclasses.field(default_factory=dict)
     _t_start: Optional[float] = None
     _t_last: Optional[float] = None
 
@@ -317,8 +371,38 @@ class EngineMetrics:
         if self._t_start is None:
             self._t_start = time.perf_counter()
 
+    def note_first_token(self, priority: str, ttft: float, *,
+                         deadlined: bool = False,
+                         missed: bool = False) -> None:
+        """Record one TTFT emission: ``ttft`` seconds for a request of
+        class ``priority``; ``deadlined`` marks the request as carrying
+        a TTFT deadline and ``missed`` that the deadline was blown
+        (per-class miss *rate* = misses / deadlined requests)."""
+        self.ttft_s.append(ttft)
+        self.first_tokens += 1
+        self.ttft_s_by_class.setdefault(priority, []).append(ttft)
+        if deadlined:
+            self.deadline_requests_by_class[priority] = \
+                self.deadline_requests_by_class.get(priority, 0) + 1
+            if missed:
+                self.deadline_misses_by_class[priority] = \
+                    self.deadline_misses_by_class.get(priority, 0) + 1
+
+    def note_completion(self, priority: str) -> None:
+        """Record one finished request of class ``priority``."""
+        self.completed += 1
+        self.completed_by_class[priority] = \
+            self.completed_by_class.get(priority, 0) + 1
+
+    def note_preemption(self, priority: str) -> None:
+        """Record one preemption of a request of class ``priority``."""
+        self.preemptions += 1
+        self.preemptions_by_class[priority] = \
+            self.preemptions_by_class.get(priority, 0) + 1
+
     def tick(self, *, queued: int, active: int, pages_in_use: int,
-             cached_pages: int = 0, evictions: int = 0) -> None:
+             cached_pages: int = 0, evictions: int = 0,
+             pages_by_class: Optional[Dict[str, int]] = None) -> None:
         now = time.perf_counter()
         if self._t_start is None:
             self._t_start = now
@@ -331,8 +415,41 @@ class EngineMetrics:
         self.peak_pages_in_use = max(self.peak_pages_in_use, pages_in_use)
         self.cached_pages = cached_pages
         self.evictions = evictions
+        for cls, n in (pages_by_class or {}).items():
+            self.peak_pages_by_class[cls] = \
+                max(self.peak_pages_by_class.get(cls, 0), n)
 
-    def snapshot(self) -> Dict[str, float]:
+    def class_snapshot(self) -> Dict[str, Dict[str, float]]:
+        """Per-priority-class summary: completed count, TTFT mean /
+        p50 / p95, preemptions, deadline totals and miss rate, and the
+        class's peak concurrent page footprint.  Classes appear once
+        any request of theirs reaches a counter."""
+        classes = (set(self.ttft_s_by_class) | set(self.completed_by_class)
+                   | set(self.preemptions_by_class)
+                   | set(self.peak_pages_by_class))
+        out: Dict[str, Dict[str, float]] = {}
+        for cls in sorted(classes):
+            ttfts = self.ttft_s_by_class.get(cls, [])
+            dl_n = self.deadline_requests_by_class.get(cls, 0)
+            dl_miss = self.deadline_misses_by_class.get(cls, 0)
+            out[cls] = {
+                "completed": self.completed_by_class.get(cls, 0),
+                "ttft_avg_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+                "ttft_p50_s": _quantile(ttfts, 0.50),
+                "ttft_p95_s": _quantile(ttfts, 0.95),
+                "preemptions": self.preemptions_by_class.get(cls, 0),
+                "deadline_requests": dl_n,
+                "deadline_misses": dl_miss,
+                "deadline_miss_rate": dl_miss / max(dl_n, 1),
+                "peak_pages": self.peak_pages_by_class.get(cls, 0),
+            }
+        return out
+
+    def snapshot(self) -> Dict[str, object]:
+        """Headline serving numbers derived from the live counters —
+        scalar rates/totals plus the dict-valued ``classes`` per-class
+        breakdown.  Safe to call at any point; benchmarks diff two
+        snapshots to exclude warmup."""
         wall = ((self._t_last - self._t_start)
                 if self._t_start is not None and self._t_last is not None
                 else 0.0)
@@ -368,4 +485,7 @@ class EngineMetrics:
             "ttft_max_s": max(self.ttft_s) if self.ttft_s else 0.0,
             "wall_s": wall,
             "tokens_per_s": gen / wall if wall > 0 else 0.0,
+            # per-priority-class breakdown (dict-valued — the one
+            # non-scalar entry; see class_snapshot)
+            "classes": self.class_snapshot(),
         }

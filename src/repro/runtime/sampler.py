@@ -11,6 +11,12 @@ for every drawn token is seeded from the request's
 :class:`SamplingParams.seed`, its engine-assigned ``rid`` and the token
 index, so a replayed request reproduces its token stream exactly and two
 requests in the same batch never share a stream.
+
+The key is ``(seed, rid, step)`` and nothing else — deliberately NOT
+the request's SLO priority class, deadline, or the scheduler's
+admission policy: scheduling decides *when* a request runs, never
+*which* tokens it produces (tests/test_slo_scheduling.py pins this).
+See docs/serving.md for where the sampler sits in the serving stack.
 """
 from __future__ import annotations
 
@@ -57,7 +63,19 @@ class Sampler:
 
     def sample(self, logits, params: SamplingParams = GREEDY, *,
                rid: int = 0, step: int = 0) -> int:
-        """Draw one token id from a ``(V,)`` logits row."""
+        """Draw one token id from a ``(V,)`` logits row.
+
+        Args:
+          logits: length-V array-like of unnormalized log-probs.
+          params: sampling configuration; greedy (or None) returns the
+              plain argmax with no RNG involved.
+          rid: engine-assigned request id — part of the RNG key.
+          step: token index within the request — part of the RNG key.
+
+        Returns:
+          The drawn token id in ``[0, V)``; identical for identical
+          ``(logits, params.seed, rid, step)`` regardless of batch
+          composition, scheduling order, or the request's SLO class."""
         logits = np.asarray(logits, np.float64).reshape(-1)
         if params is None or params.greedy:
             return int(np.argmax(logits))

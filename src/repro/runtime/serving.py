@@ -64,11 +64,34 @@ thin façades binding the Scheduler to one policy; both complete requests
 on max_new_tokens or eos and ``run`` raises :class:`SchedulerStallError`
 when ticks run out with work still pending (stalls fail loudly).
 
+    SLO classes (admission + preemption)
+      Every request carries a ``priority`` class — ``premium`` >
+      ``standard`` > ``batch`` — and an optional TTFT deadline
+      (``deadline_ms``).  Admission is a pluggable policy:
+      :class:`FCFSAdmission` (the default — byte-for-byte the historical
+      strict-FCFS behavior) or :class:`SLOAdmission`, which admits by
+      (effective class, earliest deadline, submit order) with an aging
+      bound: a queued request gains one effective class per
+      ``aging_ticks`` ticks waited, unclamped, so ``batch`` always
+      eventually outranks a stream of fresh ``premium`` arrivals.
+      Preemption victim selection is priority-aware under *every*
+      admission policy: lowest class first, youngest (highest rid)
+      within a class, and a grower never preempts a strictly
+      higher-class request on its own behalf (it evicts itself
+      instead).  With uniform priorities this degenerates to the
+      historical youngest-first rule, so default traces are unchanged.
+
 Scheduling is deterministic (FCFS admission, lowest-rid prefill first,
-seats scanned in index order, youngest-first preemption) so trace tests
-can assert exact interleavings.  ``trace`` records (tick, event, rid)
-tuples with events: admit / prefix_hit / prefill_chunk / first_token /
-decode / preempt / finish.
+seats scanned in index order, priority-aware youngest-first preemption)
+so trace tests can assert exact interleavings.  ``trace`` records
+(tick, event, rid) tuples with events: admit / prefix_hit /
+prefill_chunk / first_token / decode / preempt / deadline_miss /
+finish.
+
+See ``docs/serving.md`` for the end-to-end architecture guide (tick
+loop, page lifecycle, prefix-cache CoW, lazy growth, preemption replay,
+SLO classes) and ``docs/benchmarks.md`` for how the serving benchmarks
+measure this stack.
 """
 from __future__ import annotations
 
@@ -89,16 +112,133 @@ from repro.runtime.sampler import GREEDY, Sampler, SamplingParams
 
 
 class SchedulerStallError(RuntimeError):
-    """``run`` exhausted ``max_ticks`` with requests still queued/active."""
+    """``run`` exhausted ``max_ticks`` with requests still queued/active.
+
+    The message names every stalled request as ``rid(priority)`` so
+    starvation and deadline bugs are debuggable straight from the
+    exception (and the trace): a stall whose stragglers are all
+    ``batch`` under an aggressive aging bound reads very differently
+    from one whose ``premium`` head is blocked on pages."""
+
+
+#: Priority classes, best first.  Lower level = higher priority; the
+#: admission and preemption orderings compare these levels, never the
+#: class names.
+PRIORITIES: Dict[str, int] = {"premium": 0, "standard": 1, "batch": 2}
+
+DEFAULT_PRIORITY = "standard"
+
+
+def priority_level(req: "Request") -> int:
+    """Numeric level of ``req``'s priority class (0 = most urgent)."""
+    return PRIORITIES[req.priority]
+
+
+class FCFSAdmission:
+    """Strict first-come-first-served admission (the default).
+
+    Always proposes the queue head and nothing else; if the head cannot
+    be placed, admission stops for the tick (no skip-ahead — a convoy
+    of small requests cannot starve a large head).  This is exactly the
+    pre-SLO Scheduler behavior: with it, traces are bit-identical to
+    engines built before admission became pluggable."""
+
+    name = "fcfs"
+
+    def select(self, sched: "Scheduler") -> Optional["Request"]:
+        """Return the next admission candidate or None when the queue
+        is empty.  The Scheduler stops admitting for the tick when the
+        returned candidate cannot be placed."""
+        return sched.queue[0] if sched.queue else None
+
+
+class SLOAdmission:
+    """Priority + earliest-deadline-first admission with aging.
+
+    Candidates are ranked by ``(effective class, absolute TTFT
+    deadline, rid)``:
+
+    - *effective class* is the request's priority level minus one for
+      every ``aging_ticks`` ticks it has waited in the queue (time
+      spent decoding on a seat never counts: preemption restarts the
+      aging base at the preemption tick).  The boost is unclamped, so
+      any request — ``batch`` included — eventually outranks an
+      endless stream of fresh ``premium`` arrivals: the starvation
+      bound is ``(level_gap + 1) * aging_ticks`` ticks of queue wait.
+    - within a class, requests with a ``deadline_ms`` sort earliest
+      deadline first (EDF); requests without one sort after all
+      deadlined peers;
+    - remaining ties fall back to submit order (rid), i.e. FCFS — a
+      uniform-priority, no-deadline workload admits in exactly the
+      FCFS order.
+
+    Like FCFS, admission is strict head-of-line over this ordering:
+    when the best-ranked candidate cannot be placed, nothing else is
+    admitted this tick (skipping ahead would hand the pages the head
+    is waiting for to lower-ranked work)."""
+
+    name = "slo"
+
+    def __init__(self, aging_ticks: int = 64):
+        if aging_ticks < 1:
+            raise ValueError(f"aging_ticks must be >= 1, got {aging_ticks}")
+        self.aging_ticks = aging_ticks
+
+    def rank(self, req: "Request", tick: int) -> Tuple[int, float, int]:
+        """Admission key for ``req`` at scheduler ``tick`` (lower is
+        admitted first): (aged priority level, absolute deadline
+        seconds or +inf, rid)."""
+        waited = max(0, tick - req.submit_tick)
+        eff = priority_level(req) - waited // self.aging_ticks
+        deadline = (req.t_submit + req.deadline_ms / 1e3
+                    if req.deadline_ms is not None else math.inf)
+        return (eff, deadline, req.rid)
+
+    def select(self, sched: "Scheduler") -> Optional["Request"]:
+        """Best-ranked queued request for this tick, or None."""
+        if not sched.queue:
+            return None
+        return min(sched.queue, key=lambda r: self.rank(r, sched._tick))
+
+
+def _make_admission(admission, aging_ticks: int):
+    """Resolve an admission spec — ``"fcfs"``, ``"slo"`` or a policy
+    object with ``select(scheduler)`` — into a policy instance."""
+    if isinstance(admission, str):
+        if admission == "fcfs":
+            return FCFSAdmission()
+        if admission == "slo":
+            return SLOAdmission(aging_ticks)
+        raise ValueError(f"unknown admission policy {admission!r}; "
+                         "expected 'fcfs' or 'slo'")
+    if not hasattr(admission, "select"):
+        raise TypeError(f"admission policy {admission!r} has no select()")
+    return admission
 
 
 @dataclasses.dataclass
 class Request:
+    """One serving request and its scheduler-owned lifecycle state.
+
+    Constructor-facing fields (set via :meth:`Scheduler.submit`):
+      rid: engine-assigned id, monotonically increasing in submit order.
+      prompt: (P,) int32 token ids.
+      max_new_tokens: generation budget (the eos token counts toward it).
+      eos_id: stop decoding early when this token is produced.
+      sampling: per-request :class:`SamplingParams` (greedy by default).
+      priority: SLO class name — one of :data:`PRIORITIES`.
+      deadline_ms: optional TTFT deadline, milliseconds from submit;
+          drives EDF ordering under :class:`SLOAdmission` and the
+          deadline-miss metric/trace event under every policy.
+    The remaining fields are filled in by the engine as the request
+    moves through admit → prefill → decode → finish (or preempt)."""
     rid: int
     prompt: np.ndarray              # (P,) int32
     max_new_tokens: int
     eos_id: Optional[int] = None
     sampling: SamplingParams = GREEDY
+    priority: str = DEFAULT_PRIORITY
+    deadline_ms: Optional[float] = None
     # filled by the engine:
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None      # seat index (paged) / cache slot (fixed)
@@ -113,6 +253,7 @@ class Request:
     #                                             generated[:-1])
     times_preempted: int = 0
     done: bool = False
+    submit_tick: int = 0            # scheduler tick at submit (aging base)
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
@@ -135,10 +276,36 @@ class Scheduler:
     default_max_ticks = 100_000
 
     def __init__(self, policy, *, max_seats: int,
-                 sampler: Optional[Sampler] = None, page_capacity: int = 0):
+                 sampler: Optional[Sampler] = None, page_capacity: int = 0,
+                 admission="fcfs", aging_ticks: int = 64):
+        """Bind ``policy`` (the KV placement + model arithmetic) to a
+        fresh scheduler.
+
+        Args:
+          policy: placement policy (:class:`FixedSlotPolicy` or
+              :class:`PagedPolicy`); ``policy.bind(self)`` is called.
+          max_seats: concurrent-request limit (seat indices
+              ``0..max_seats-1``).
+          sampler: shared :class:`~repro.runtime.sampler.Sampler`;
+              a default stateless one is built when None.
+          page_capacity: usable KV pages, threaded into
+              :class:`EngineMetrics` for utilization reporting (0 for
+              pageless policies).
+          admission: ``"fcfs"`` (default, historical behavior),
+              ``"slo"`` (priority + EDF + aging) or a policy object
+              with ``select(scheduler) -> Optional[Request]``.
+          aging_ticks: SLO anti-starvation bound — a queued request
+              gains one effective priority class per this many ticks
+              waited.  Ignored by FCFS.
+
+        Raises:
+          ValueError: unknown ``admission`` name or ``aging_ticks < 1``.
+          TypeError: ``admission`` object without a ``select`` method.
+        """
         self.policy = policy
         self.max_seats = max_seats
         self.sampler = sampler or Sampler()
+        self.admission = _make_admission(admission, aging_ticks)
         self.seats: Dict[int, Request] = {}             # seat -> request
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
@@ -152,10 +319,39 @@ class Scheduler:
 
     def submit(self, prompt, max_new_tokens: int = 16,
                eos_id: Optional[int] = None,
-               sampling: Optional[SamplingParams] = None) -> int:
+               sampling: Optional[SamplingParams] = None,
+               priority: str = DEFAULT_PRIORITY,
+               deadline_ms: Optional[float] = None) -> int:
+        """Queue one request; returns its engine-assigned rid.
+
+        Args:
+          prompt: 1-D int32 token ids (non-empty).
+          max_new_tokens: generation budget, >= 1.
+          eos_id: optional early-stop token id.
+          sampling: per-request :class:`SamplingParams` (greedy when
+              None).  The sampler keys its streams by (seed, rid,
+              step) only — priority never changes tokens.
+          priority: SLO class, one of :data:`PRIORITIES`
+              (``premium``/``standard``/``batch``).
+          deadline_ms: optional TTFT deadline in milliseconds from now
+              (must be > 0): EDF ordering under ``slo`` admission and
+              deadline-miss accounting under every policy.
+
+        Raises:
+          ValueError: unknown priority, non-positive deadline, or a
+              prompt/budget the bound policy cannot ever place
+              (empty prompt, ``prompt + max_new_tokens`` over the
+              engine's length bound, or an infeasible page demand).
+        """
+        if priority not in PRIORITIES:
+            raise ValueError(f"unknown priority {priority!r}; expected one "
+                             f"of {sorted(PRIORITIES)}")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
         req = Request(self._next_rid, np.asarray(prompt, np.int32),
                       max_new_tokens, eos_id, sampling or GREEDY,
-                      t_submit=time.perf_counter())
+                      priority=priority, deadline_ms=deadline_ms,
+                      submit_tick=self._tick, t_submit=time.perf_counter())
         self.policy.validate(req)
         self._next_rid += 1
         self.queue.append(req)
@@ -166,16 +362,20 @@ class Scheduler:
         return [s for s in range(self.max_seats) if s not in self.seats]
 
     def _admit_from_queue(self):
-        """FCFS: admit while the head request's seat AND placement are
-        available (preemption-free — an admitted request can always run
-        to completion; shortfall queues, never crashes)."""
+        """Admit while the admission policy's candidate has a seat AND
+        a placement (preemption-free at admission time — an admitted
+        request can always start; shortfall queues, never crashes).
+        The candidate is the queue head under FCFS, the best
+        (class, deadline, rid) rank under SLO; either way admission is
+        strict head-of-line: the first unplaceable candidate ends the
+        tick's admissions."""
         for seat in self._free_seats():
-            if not self.queue:
+            req = self.admission.select(self)
+            if req is None:
                 break
-            req = self.queue[0]
             if not self.policy.try_admit(req, seat):
                 break
-            self.queue.popleft()
+            self.queue.remove(req)
             req.slot = seat
             self.seats[seat] = req
             self.metrics.admitted += 1
@@ -195,9 +395,14 @@ class Scheduler:
                                       rid=req.rid, step=0)
         req.generated.append(tok)
         req.t_first_token = time.perf_counter()
-        self.metrics.ttft_s.append(req.t_first_token - req.t_submit)
-        self.metrics.first_tokens += 1
+        ttft = req.t_first_token - req.t_submit
+        missed = req.deadline_ms is not None and ttft * 1e3 > req.deadline_ms
+        self.metrics.note_first_token(req.priority, ttft,
+                                      deadlined=req.deadline_ms is not None,
+                                      missed=missed)
         self.trace.append((self._tick, "first_token", req.rid))
+        if missed:
+            self.trace.append((self._tick, "deadline_miss", req.rid))
         hit_eos = req.eos_id is not None and tok == req.eos_id
         if req.max_new_tokens <= 1 or hit_eos:
             self.finish(req)
@@ -231,12 +436,15 @@ class Scheduler:
             self.finish(req)
 
     def finish(self, req: Request) -> None:
+        """Complete ``req``: the policy releases its KV placement, the
+        seat frees, and per-engine + per-class completion counters and
+        the ``finish`` trace event are recorded."""
         req.done = True
         req.t_done = time.perf_counter()
         self.policy.release(req)
         del self.seats[req.slot]
         self.finished.append(req)
-        self.metrics.completed += 1
+        self.metrics.note_completion(req.priority)
         self.trace.append((self._tick, "finish", req.rid))
 
     def preempt(self, req: Request) -> None:
@@ -245,7 +453,13 @@ class Scheduler:
         source), generated-so-far tokens are kept, and the request
         returns to the queue *head* — re-admission re-prefills
         ``prompt + generated``, cheap when the prefix index still holds
-        the prompt pages."""
+        the prompt pages.  (Under SLO admission the requeue position is
+        cosmetic: ordering is recomputed from class/deadline/rid every
+        tick.)
+
+        Raises:
+          ValueError: ``req`` has not emitted its first token yet (a
+              mid-prefill request has no tokens to replay)."""
         if not req.generated:
             raise ValueError(
                 f"cannot preempt request {req.rid} before its first "
@@ -255,24 +469,72 @@ class Scheduler:
         del self.seats[req.slot]
         req.slot = None
         self.queue.appendleft(req)
+        # aging measures queue wait, not lifetime: restart the aging
+        # base at the preemption tick so time spent decoding on a seat
+        # cannot boost a preempted batch request past fresh premium
+        # arrivals (FCFS ignores submit_tick entirely)
+        req.submit_tick = self._tick
         req.times_preempted += 1
-        self.metrics.preemptions += 1
+        self.metrics.note_preemption(req.priority)
         self.trace.append((self._tick, "preempt", req.rid))
+
+    def pick_victim(self, victims: List[Request],
+                    grower: Request) -> Request:
+        """Priority-aware preemption victim among ``victims`` (all
+        decoding) on behalf of ``grower``: the lowest class goes first,
+        youngest (highest rid) within a class — and a grower never
+        preempts a strictly higher class than its own; when only
+        higher-class victims exist it evicts itself.  With uniform
+        priorities this is exactly the historical youngest-first
+        rule.
+
+        When ``grower`` is itself in ``victims`` (as in
+        ``PagedPolicy._grow_tick``), the ``max`` alone already yields
+        self-eviction — the grower outranks any strictly higher class
+        in this ordering — so the explicit guard below exists for
+        callers passing a victim set that *excludes* the grower, where
+        it enforces the never-preempt-upward contract."""
+        victim = max(victims, key=lambda r: (priority_level(r), r.rid))
+        if priority_level(victim) < priority_level(grower):
+            return grower
+        return victim
 
     # -- one engine tick -----------------------------------------------------
 
     def step(self):
+        """One engine tick: admission, one prefill round, one decode
+        round, then a metrics sample (queue depth, active seats, page
+        occupancy overall and per priority class)."""
         self.metrics.begin()
         self._tick += 1
         self._admit_from_queue()
         self.policy.prefill_tick()
         self.policy.decode_tick()
         cached, evictions = self.policy.cache_stats()
+        pages_by_class: Dict[str, int] = {}
+        for r in self.seats.values():
+            if r.pages:
+                pages_by_class[r.priority] = (
+                    pages_by_class.get(r.priority, 0) + len(r.pages))
         self.metrics.tick(queued=len(self.queue), active=len(self.seats),
                           pages_in_use=self.policy.pages_in_use(),
-                          cached_pages=cached, evictions=evictions)
+                          cached_pages=cached, evictions=evictions,
+                          pages_by_class=pages_by_class)
 
     def run(self, max_ticks: Optional[int] = None) -> List[Request]:
+        """Tick until every submitted request finishes.
+
+        Args:
+          max_ticks: stall bound; the engine's ``default_max_ticks``
+              when None.
+
+        Returns:
+          All finished :class:`Request` objects, completion order.
+
+        Raises:
+          SchedulerStallError: ticks ran out with work still pending;
+              the message names each stalled request as
+              ``rid(priority)``."""
         if max_ticks is None:
             max_ticks = self.default_max_ticks
         t = 0
@@ -280,11 +542,13 @@ class Scheduler:
             self.step()
             t += 1
         if self.queue or self.seats:
+            stalled = sorted(list(self.queue) + list(self.seats.values()),
+                             key=lambda r: r.rid)
             raise SchedulerStallError(
                 f"run() exhausted max_ticks={max_ticks} with "
                 f"{len(self.queue)} queued and {len(self.seats)} active "
-                f"requests (rids "
-                f"{sorted([r.rid for r in self.queue] + [r.rid for r in self.seats.values()])})")
+                f"requests: "
+                + ", ".join(f"{r.rid}({r.priority})" for r in stalled))
         return self.finished
 
 
@@ -324,15 +588,26 @@ class FixedSlotPolicy:
             lambda p, b: M.prefill(p, cfg, b, rules, self.opts))
 
     def bind(self, sched: Scheduler) -> None:
+        """Attach the owning :class:`Scheduler` (called once, by its
+        constructor)."""
         self.sched = sched
 
     def pages_in_use(self) -> int:
+        """Always 0 — fixed slots are not page-accounted."""
         return 0
 
     def cache_stats(self) -> Tuple[int, int]:
+        """(cached reclaimable pages, evictions) — both always 0 here;
+        the fixed-slot layout has no prefix cache."""
         return 0, 0
 
     def validate(self, req: Request) -> None:
+        """Reject a request this layout could never place.
+
+        Raises:
+          ValueError: empty prompt, prompt >= ``max_len``, or
+              ``prompt + max_new_tokens`` > ``max_len`` (decode would
+              clamp into the last cache slot and corrupt KV)."""
         total = len(req.prompt) + req.max_new_tokens
         if len(req.prompt) == 0:
             raise ValueError("empty prompt")
@@ -345,12 +620,15 @@ class FixedSlotPolicy:
                              "into the last cache slot and corrupt KV")
 
     def try_admit(self, req: Request, seat: int) -> bool:
-        return True                       # the seat is the only resource
+        """Always True: the seat itself is the only fixed-slot
+        resource (every slot is pre-provisioned for ``max_len``)."""
+        return True
 
     def release(self, req: Request) -> None:
-        # park the slot's write position on the scratch index so the idle
-        # slot's pass through the batched decode stops touching the KV
-        # its previous occupant wrote
+        """Return a finished request's slot: the write position parks
+        on the scratch index so the idle slot's pass through the
+        batched decode stops touching the KV its previous occupant
+        wrote."""
         self.pos = self.pos.at[req.slot].set(self.max_len)
 
     def preempt(self, req: Request) -> None:
@@ -492,15 +770,29 @@ class PagedPolicy:
         self._cow_fn = jax.jit(M.copy_paged_page, donate_argnums=donate)
 
     def bind(self, sched: Scheduler) -> None:
+        """Attach the owning :class:`Scheduler` (called once, by its
+        constructor)."""
         self.sched = sched
 
     def pages_in_use(self) -> int:
+        """Pages currently referenced by at least one live request."""
         return self.bm.in_use
 
     def cache_stats(self) -> Tuple[int, int]:
+        """(reclaimable prefix-cache pages, evictions so far) from the
+        underlying :class:`BlockManager`."""
         return self.bm.cached, self.bm.evictions
 
     def validate(self, req: Request) -> None:
+        """Reject a request this pool could never place.
+
+        Raises:
+          ValueError: empty prompt; ``prompt + max_new_tokens`` >
+              ``max_seq_len``; or (reserved mode only) a page demand
+              over the whole pool's capacity.  In lazy mode the
+              constructor's ``n_tables <= capacity`` bound already
+              makes ``max_seq_len`` the per-request feasibility
+              limit."""
         total = len(req.prompt) + req.max_new_tokens
         if len(req.prompt) == 0:
             raise ValueError("empty prompt")
@@ -517,6 +809,13 @@ class PagedPolicy:
     # -- admission: seat + page budget + prefix reuse -------------------------
 
     def try_admit(self, req: Request, seat: int) -> bool:
+        """Place ``req`` at ``seat`` if the pool allows: reserve its
+        pages (prompt-only in lazy mode, prompt + full budget in
+        reserved mode), take refs on cached prefix pages, copy-on-write
+        a partially matching page, and point the seat's page-table row
+        at the result.  Returns False — with no side effects — when
+        the pool cannot cover the demand (the scheduler keeps the
+        request queued)."""
         # a starved queue head re-attempts every tick; skip the O(prompt)
         # prefix match until the pool/index actually changed
         if req.match_version == self.bm.version:
@@ -578,6 +877,9 @@ class PagedPolicy:
         return True
 
     def release(self, req: Request) -> None:
+        """Drop a finished request's page refs and clear its page-table
+        row; registered prompt pages park reclaimable in the prefix
+        index, everything else returns to the free list."""
         self.bm.free(req.pages)
         self.page_table[req.slot] = 0
         self.pos[req.slot] = 0
@@ -655,9 +957,11 @@ class PagedPolicy:
     def _grow_tick(self) -> None:
         """Lazy mode: hand each decoding seat the page its next write
         needs (one page per boundary crossing), oldest request first.
-        When the pool cannot grow, preempt the youngest decoding request
-        — possibly the grower itself — until the allocation succeeds or
-        the grower is gone."""
+        When the pool cannot grow, preempt the
+        :meth:`Scheduler.pick_victim` choice — lowest priority class
+        first, youngest within a class, never a strictly higher class
+        than the grower's (then the grower evicts itself) — until the
+        allocation succeeds or the grower is gone."""
         sched = self.sched
         for s in sorted(self._decoding_seats(),
                         key=lambda s: sched.seats[s].rid):
@@ -669,8 +973,8 @@ class PagedPolicy:
             pg = self.bm.try_grow(req.rid)
             while pg is None:
                 victims = [sched.seats[v] for v in self._decoding_seats()]
-                victim = max(victims, key=lambda r: r.rid)
-                sched.preempt(victim)        # youngest decoding request
+                victim = sched.pick_victim(victims, req)
+                sched.preempt(victim)
                 if victim is req:
                     break                    # grower evicted itself
                 pg = self.bm.try_grow(req.rid)
@@ -710,17 +1014,23 @@ class PagedPolicy:
 class ServingEngine(Scheduler):
     """Fixed-slot continuous-batching engine: the Scheduler bound to
     :class:`FixedSlotPolicy`.  Serves every arch (SSM, enc-dec, frontend)
-    and is the equivalence oracle for the paged engine."""
+    and is the equivalence oracle for the paged engine.
+
+    ``admission`` selects the queue policy (``"fcfs"`` default /
+    ``"slo"``) and ``aging_ticks`` its anti-starvation bound — see
+    :class:`SLOAdmission` and docs/serving.md."""
 
     default_max_ticks = 10_000
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
                  rules: LogicalRules = SINGLE_DEVICE_RULES,
                  opts: Optional[M.RunOptions] = None,
-                 sampler: Optional[Sampler] = None):
+                 sampler: Optional[Sampler] = None,
+                 admission="fcfs", aging_ticks: int = 64):
         policy = FixedSlotPolicy(cfg, params, slots=slots, max_len=max_len,
                                  rules=rules, opts=opts)
-        super().__init__(policy, max_seats=slots, sampler=sampler)
+        super().__init__(policy, max_seats=slots, sampler=sampler,
+                         admission=admission, aging_ticks=aging_ticks)
         self.cfg = cfg
         self.params = params
         self.B = slots
@@ -750,7 +1060,10 @@ class PagedServingEngine(Scheduler):
     decoding request (recompute-on-readmission) under page pressure;
     ``lazy_pages=False`` restores up-front full reservation.
     ``watermark`` is the lazy admission gate's free-page headroom as a
-    fraction of pool capacity (≥1 page; waived on an idle pool)."""
+    fraction of pool capacity (≥1 page; waived on an idle pool).
+    ``admission`` selects the queue policy (``"fcfs"`` default /
+    ``"slo"``) and ``aging_ticks`` its anti-starvation bound — see
+    :class:`SLOAdmission` and docs/serving.md."""
 
     default_max_ticks = 100_000
 
@@ -761,7 +1074,8 @@ class PagedServingEngine(Scheduler):
                  opts: Optional[M.RunOptions] = None,
                  sampler: Optional[Sampler] = None,
                  prefix_cache: bool = True, lazy_pages: bool = True,
-                 watermark: float = 0.05):
+                 watermark: float = 0.05,
+                 admission="fcfs", aging_ticks: int = 64):
         policy = PagedPolicy(cfg, params, page_size=page_size,
                              num_pages=num_pages, max_seats=max_seats,
                              max_seq_len=max_seq_len,
@@ -769,7 +1083,8 @@ class PagedServingEngine(Scheduler):
                              opts=opts, prefix_cache=prefix_cache,
                              lazy_pages=lazy_pages, watermark=watermark)
         super().__init__(policy, max_seats=max_seats, sampler=sampler,
-                         page_capacity=policy.bm.capacity)
+                         page_capacity=policy.bm.capacity,
+                         admission=admission, aging_ticks=aging_ticks)
         self.cfg = cfg
         self.params = params
         self.page_size = page_size

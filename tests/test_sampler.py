@@ -131,3 +131,21 @@ def test_fixed_engine_sampled_run_is_deterministic(engine_setup):
         done = eng.run()
         runs.append({r.rid: r.generated for r in done})
     assert runs[0] == runs[1]
+
+
+def test_sampler_key_is_seed_rid_step_only():
+    """SLO scheduling must never change tokens: the sampling key is
+    (seed, rid, step) and nothing else — Sampler.sample has no notion
+    of priority/deadline/admission, so two requests that differ only
+    in SLO class draw identical streams (the engine-level half of this
+    invariant lives in tests/test_slo_scheduling.py)."""
+    import inspect
+    sig = inspect.signature(Sampler.sample)
+    assert set(sig.parameters) == {"self", "logits", "params",
+                                   "rid", "step"}
+    rng = np.random.default_rng(4)
+    logits = rng.normal(size=(64,))
+    sp = SamplingParams(temperature=0.9, top_p=0.8, seed=5)
+    s = Sampler()
+    draws = [s.sample(logits, sp, rid=2, step=7) for _ in range(3)]
+    assert len(set(draws)) == 1

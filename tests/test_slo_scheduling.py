@@ -1,0 +1,324 @@
+"""SLO-tiered scheduling: priority/EDF admission with aging,
+priority-aware preemption victim selection, per-class metrics, deadline
+misses — and the two invariants the feature must never break: FCFS
+stays bit-identical to the pre-SLO scheduler, and scheduling never
+changes tokens (the sampler key is (seed, rid, step), not priority).
+
+See docs/serving.md ("SLO classes") for the design this pins."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models import model as M
+from repro.runtime.sampler import SamplingParams
+from repro.runtime.serving import (PRIORITIES, PagedServingEngine,
+                                   SchedulerStallError, ServingEngine,
+                                   SLOAdmission)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config(get_config("qwen3-1.7b"))
+    params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def admit_order(eng):
+    return [r for (_, k, r) in eng.trace if k == "admit"]
+
+
+def preempted_rids(eng):
+    return {r for (_, k, r) in eng.trace if k == "preempt"}
+
+
+# -- admission ordering ------------------------------------------------------
+
+def test_slo_admission_prefers_premium(setup):
+    """With one slot and a pre-loaded queue, slo admission runs the
+    late-submitted premium request first; batch ties keep submit
+    order."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=1, max_len=32, admission="slo")
+    for prio in ("batch", "batch", "premium"):
+        eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                   priority=prio)
+    eng.run()
+    assert admit_order(eng) == [2, 0, 1]
+
+
+def test_edf_orders_within_class(setup):
+    """Same class, both deadlined: the earlier absolute deadline is
+    admitted first even with a higher rid; an undeadlined peer of the
+    same class sorts after every deadlined one."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=1, max_len=32, admission="slo")
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+               deadline_ms=50_000.0)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+               deadline_ms=100.0)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2)
+    eng.run()
+    assert admit_order(eng) == [1, 0, 2]
+
+
+def test_equal_priority_ties_fall_back_to_fcfs(setup):
+    """A uniform-priority, no-deadline workload admits in exactly the
+    FCFS order under slo admission — the whole trace matches."""
+    cfg, params = setup
+
+    def run(admission):
+        eng = ServingEngine(cfg, params, slots=2, max_len=48,
+                            admission=admission)
+        for i in range(5):
+            eng.submit(np.arange(3 + i, dtype=np.int32),
+                       max_new_tokens=2 + (i % 3))
+        eng.run()
+        return eng
+
+    assert run("slo").trace == run("fcfs").trace
+
+
+def test_fcfs_default_is_bit_identical_with_priorities_present(setup):
+    """admission='fcfs' (and the default) ignores priority entirely:
+    the trace equals a default-constructed engine's on the same stream
+    — mixed classes included — and admits in submit order."""
+    cfg, params = setup
+    prios = ["batch", "premium", "standard", "batch", "premium"]
+
+    def run(**kw):
+        eng = PagedServingEngine(cfg, params, page_size=8, num_pages=16,
+                                 max_seats=2, max_seq_len=32,
+                                 prefill_chunk=8, **kw)
+        for i, p in enumerate(prios):
+            eng.submit(np.arange(4 + i, dtype=np.int32), max_new_tokens=3,
+                       priority=p)
+        eng.run()
+        return eng
+
+    default = run()
+    explicit = run(admission="fcfs")
+    assert default.trace == explicit.trace
+    assert admit_order(default) == [0, 1, 2, 3, 4]
+
+
+def test_aging_unstarves_batch_under_sustained_premium_load(setup):
+    """One slot, a batch request queued at tick 0, and a fresh premium
+    request injected whenever the premium pipeline empties.  Without
+    aging the batch request starves until the premium stream stops;
+    with aging_ticks=2 its effective class outranks fresh premium
+    arrivals within a few ticks and it is admitted mid-stream."""
+    cfg, params = setup
+
+    def run(aging_ticks, n_premium=6):
+        eng = ServingEngine(cfg, params, slots=1, max_len=32,
+                            admission="slo", aging_ticks=aging_ticks)
+        batch_rid = eng.submit(np.arange(4, dtype=np.int32),
+                               max_new_tokens=2, priority="batch")
+        fed = 0
+        for _ in range(200):
+            if (fed < n_premium
+                    and not any(r.priority == "premium" for r in eng.queue)):
+                eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                           priority="premium")
+                fed += 1
+            eng.step()
+            if not eng.queue and not eng.seats:
+                break
+        assert not eng.queue and not eng.seats, "workload did not drain"
+        order = admit_order(eng)
+        return order.index(batch_rid), len(order)
+
+    starved_pos, n = run(aging_ticks=10_000)
+    assert starved_pos == n - 1          # batch ran dead last
+    aged_pos, n = run(aging_ticks=2)
+    assert aged_pos < n - 1              # un-starved mid-stream
+    assert aged_pos > 0                  # but premium still went first
+
+
+def test_slo_admission_rank_is_unclamped():
+    """The aging boost has no floor: any class eventually outranks a
+    fresh premium arrival — the anti-starvation bound is
+    (level_gap + 1) * aging_ticks ticks."""
+    import dataclasses
+
+    @dataclasses.dataclass
+    class Stub:
+        rid: int
+        priority: str
+        deadline_ms: object
+        submit_tick: int
+        t_submit: float = 0.0
+
+    pol = SLOAdmission(aging_ticks=4)
+    old_batch = Stub(0, "batch", None, submit_tick=0)
+    fresh_premium = Stub(9, "premium", None, submit_tick=12)
+    tick = 12
+    assert pol.rank(old_batch, tick)[0] == PRIORITIES["batch"] - 3
+    assert pol.rank(old_batch, tick) < pol.rank(fresh_premium, tick)
+    with pytest.raises(ValueError):
+        SLOAdmission(aging_ticks=0)
+
+
+def test_submit_rejects_bad_priority_and_deadline(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=1, max_len=32)
+    with pytest.raises(ValueError, match="priority"):
+        eng.submit(np.arange(4, dtype=np.int32), priority="vip")
+    with pytest.raises(ValueError, match="deadline_ms"):
+        eng.submit(np.arange(4, dtype=np.int32), deadline_ms=0)
+    with pytest.raises(ValueError, match="admission"):
+        ServingEngine(cfg, params, slots=1, max_len=32, admission="bogus")
+
+
+# -- priority-aware preemption ----------------------------------------------
+
+PKW = dict(page_size=4, max_seats=2, max_seq_len=24, prefill_chunk=8)
+
+
+def _run_pair(cfg, params, num_pages, prios, **over):
+    eng = PagedServingEngine(cfg, params, num_pages=num_pages,
+                             **{**PKW, **over})
+    for i, prio in enumerate(prios):
+        mult = 3 if i == 0 else 7
+        eng.submit((np.arange(8, dtype=np.int32) * mult) % cfg.vocab_size,
+                   max_new_tokens=10, priority=prio)
+    eng.run()
+    return eng, {r.rid: r.generated for r in eng.finished}
+
+
+def test_victim_is_lowest_class_not_youngest(setup):
+    """Growth failure with an old batch request and a young premium
+    one: the batch request is preempted even though the pre-SLO rule
+    (youngest first) would have evicted the premium request."""
+    cfg, params = setup
+    _, ref = _run_pair(cfg, params, 32, ("batch", "premium"))
+    tight, out = _run_pair(cfg, params, 7, ("batch", "premium"))
+    assert tight.metrics.preemptions >= 1
+    assert preempted_rids(tight) == {0}          # batch, despite rid 0
+    assert out == ref                            # replay token-identical
+    assert tight.metrics.preemptions_by_class.get("premium", 0) == 0
+
+
+def test_victim_is_youngest_within_a_class(setup):
+    """Uniform classes keep the historical youngest-first rule (rid 1
+    evicted) — the degenerate case FCFS trace-identity relies on."""
+    cfg, params = setup
+    tight, _ = _run_pair(cfg, params, 7, ("standard", "standard"))
+    assert tight.metrics.preemptions >= 1
+    assert preempted_rids(tight) == {1}
+
+
+def test_grower_never_preempts_strictly_higher_class(setup):
+    """When the only other decoding request outranks the grower, the
+    grower evicts itself: premium keeps decoding untouched while the
+    batch grower takes the preempt-and-recompute path."""
+    cfg, params = setup
+    _, ref = _run_pair(cfg, params, 32, ("premium", "batch"))
+    tight, out = _run_pair(cfg, params, 7, ("premium", "batch"))
+    assert tight.metrics.preemptions >= 1
+    assert preempted_rids(tight) == {1}          # the batch request only
+    assert tight.metrics.preemptions_by_class.get("premium", 0) == 0
+    assert out == ref
+
+
+def test_preemption_resets_aging_base(setup):
+    """Aging measures queue wait, not lifetime: preemption restarts the
+    aging base at the preemption tick, so time spent decoding on a seat
+    cannot boost a preempted batch request past fresh premium
+    arrivals when it re-queues."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=1, max_len=32, admission="slo")
+    eng.submit(np.arange(6, dtype=np.int32), max_new_tokens=8,
+               priority="batch")
+    for _ in range(3):
+        eng.step()
+    req = eng.seats[0]
+    assert req.submit_tick == 0 and eng._tick == 3
+    eng.preempt(req)
+    assert req.submit_tick == 3                  # aging base restarted
+    assert len(eng.run()) == 1                   # replay still completes
+
+
+# -- tokens are scheduling-invariant ----------------------------------------
+
+def test_sampler_keying_unchanged_by_priority(setup):
+    """Priority classes and the admission policy reorder *when*
+    requests run, never *which* tokens they produce: the stochastic
+    sampler keys by (seed, rid, step) only, so per-rid outputs match
+    between an all-standard FCFS run and a mixed-class slo run."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.8, top_p=0.9, seed=11)
+    prompts = [(np.arange(6 + i, dtype=np.int32) * (2 * i + 3))
+               % cfg.vocab_size for i in range(4)]
+
+    def run(admission, prios):
+        eng = PagedServingEngine(cfg, params, page_size=8, num_pages=32,
+                                 max_seats=2, max_seq_len=32,
+                                 prefill_chunk=8, admission=admission)
+        for p, prio in zip(prompts, prios):
+            eng.submit(p, max_new_tokens=5, sampling=sp, priority=prio)
+        eng.run()
+        return {r.rid: r.generated for r in eng.finished}
+
+    ref = run("fcfs", ["standard"] * 4)
+    mixed = run("slo", ["batch", "premium", "batch", "premium"])
+    assert mixed == ref
+
+
+# -- observability -----------------------------------------------------------
+
+def test_stall_error_names_rids_and_priorities(setup):
+    cfg, params = setup
+    eng = PagedServingEngine(cfg, params, page_size=8, num_pages=8,
+                             max_seats=1, max_seq_len=24, prefill_chunk=8)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=6,
+               priority="premium")
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=6,
+               priority="batch")
+    with pytest.raises(SchedulerStallError) as ei:
+        eng.run(max_ticks=1)
+    msg = str(ei.value)
+    assert "queued" in msg
+    assert "0(premium)" in msg and "1(batch)" in msg
+
+
+def test_deadline_miss_recorded(setup):
+    """An unmeetable TTFT deadline lands in the trace, the per-class
+    counters, and the snapshot's miss rate; a generous deadline does
+    not."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=2, max_len=32)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+               priority="premium", deadline_ms=1e-4)
+    eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=2,
+               priority="premium", deadline_ms=1e9)
+    eng.run()
+    assert [r for (_, k, r) in eng.trace if k == "deadline_miss"] == [0]
+    cls = eng.metrics.snapshot()["classes"]["premium"]
+    assert cls["deadline_requests"] == 2
+    assert cls["deadline_misses"] == 1
+    assert cls["deadline_miss_rate"] == 0.5
+
+
+def test_per_class_metrics_snapshot(setup):
+    """The classes breakdown: completion counts partition the total,
+    TTFT percentiles are ordered, and paged runs report a per-class
+    peak page footprint."""
+    cfg, params = setup
+    eng = PagedServingEngine(cfg, params, page_size=8, num_pages=16,
+                             max_seats=2, max_seq_len=32, prefill_chunk=8,
+                             admission="slo")
+    for i, prio in enumerate(["premium", "batch", "standard", "batch"]):
+        eng.submit(np.arange(5 + i, dtype=np.int32), max_new_tokens=3,
+                   priority=prio)
+    eng.run()
+    m = eng.metrics.snapshot()
+    cls = m["classes"]
+    assert set(cls) == {"premium", "standard", "batch"}
+    assert sum(c["completed"] for c in cls.values()) == m["completed"] == 4
+    for c in cls.values():
+        assert 0 < c["ttft_p50_s"] <= c["ttft_p95_s"]
+        assert c["peak_pages"] >= 1
+    assert sum(c["preemptions"] for c in cls.values()) \
+        == m["preemptions"]
