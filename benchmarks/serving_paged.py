@@ -39,6 +39,22 @@ priority-aware preemption): premium mean TTFT must strictly improve
 while batch throughput stays within 20% and outputs stay
 token-identical per request (scheduling never changes tokens).
 
+Workload 5 (multi-model fleet): two models served from ONE process by a
+``runtime.router.ModelFleet`` under one total page budget, with skewed
+per-model load (the heavy model gets 7 of every 8 requests, each a long
+generation; the light model serves occasional short chats).
+The fleet runs twice at the SAME total budget: *shared* (small
+per-model floors, the surplus redistributed at admission time by the
+``HostBudget``) vs a *static 50/50 split* (each model's floor is half
+the budget, zero surplus — the partitioning a per-model deployment
+would hard-code).  The busy model borrows the idle model's headroom in
+the shared configuration, so aggregate fleet tokens/s must stay within
+10% of — and typically beat — the best static split, while per-rid
+outputs stay token-identical (fleet rids are global, so routing and
+budget policy never change tokens).  Note the budget governs *live*
+pages: each shared-mode engine's physical pool is sized to absorb the
+whole surplus (see docs/serving.md).
+
 Prints ``name,tokens_per_s,detail`` CSV rows plus ratio lines, and
 writes tokens/s, TTFT, page utilization and prefix-hit rate for every
 engine run to ``--json-out`` (default BENCH_serving.json).  Run:
@@ -60,6 +76,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.models import model as M
+from repro.runtime.router import FleetModel, ModelFleet
 from repro.runtime.serving import PagedServingEngine, ServingEngine
 
 
@@ -510,6 +527,150 @@ def bench_slo_classes(cfg, params, args):
             "token_identical": True}
 
 
+def bench_fleet(cfg, params, args):
+    """Multi-model fleet, shared HostBudget vs static 50/50 split, at
+    equal total page budget on a skewed per-model stream (workload 5).
+
+    The heavy model (``--arch``) receives 7 of every 8 requests, each
+    decoding a long generation; the light model (``--fleet-arch2``)
+    gets the rest as short chats.  Both fleet
+    configurations submit the identical interleaved stream with
+    identical fleet-global rids, so per-rid outputs must be
+    token-identical — the budget split decides only how many requests
+    decode concurrently.  Shared mode must land within 10% of the
+    static split's aggregate tokens/s (and typically beats it: the
+    heavy model borrows the light model's idle pages)."""
+    ps = args.page_size
+    max_new = args.fleet_max_new
+    max_seq = ps + max_new          # prompts span at most one page
+    n_tables = -(-max_seq // ps)
+    total = args.fleet_budget_tokens // ps
+    if total < 2 * n_tables:
+        raise SystemExit(
+            f"--fleet-budget-tokens {args.fleet_budget_tokens} too small: "
+            f"the budget must cover one max-length request per model "
+            f"({2 * n_tables} pages of {ps} tokens)")
+    if args.fleet_light_gen > max_new:
+        raise SystemExit(
+            f"--fleet-light-gen {args.fleet_light_gen} exceeds "
+            f"--fleet-max-new {max_new}")
+    cfg2 = reduced_config(get_config(args.fleet_arch2))
+    params2 = M.init_params(M.param_specs(cfg2), jax.random.PRNGKey(1),
+                            dtype=jnp.float32)
+    names = (args.arch, args.fleet_arch2)
+    # skewed per-model load in volume AND shape: the heavy model gets 7
+    # of every 8 requests, each a long generation that must grow far
+    # past its prompt page; the light model's occasional requests are
+    # short chats that fit comfortably inside its floor, so its engine
+    # idles early and its headroom is genuinely idle
+    rng = np.random.default_rng(args.seed)
+    reqs = []        # (model, prompt, max_new) in submit order
+    for i in range(args.fleet_requests):
+        name = names[0] if i % 8 != 7 else names[1]
+        gen = max_new if name == names[0] else args.fleet_light_gen
+        plen = int(rng.integers(4, ps + 1))
+        reqs.append((name, rng.integers(0, 250, plen).astype(np.int32),
+                     gen))
+    n_heavy = sum(1 for n, _, _ in reqs if n == names[0])
+    print(f"# workload5: {len(reqs)} requests ({n_heavy} {names[0]}, "
+          f"{len(reqs) - n_heavy} {names[1]}), budget={total} pages "
+          f"shared by both models, median of {args.fleet_reps} "
+          f"interleaved reps")
+
+    def one_rep(shared):
+        if shared:
+            floors = (n_tables, n_tables)   # minimum floors, max surplus
+        else:
+            floors = (total - total // 2, total // 2)   # static 50/50
+        fleet = ModelFleet(
+            [FleetModel(names[0], cfg, params, floor=floors[0]),
+             FleetModel(names[1], cfg2, params2, floor=floors[1])],
+            total_pages=total, page_size=ps, max_seats=args.fleet_seats,
+            max_seq_len=max_seq, prefill_chunk=ps)
+        wp = np.full(ps, 251, np.int32)     # disjoint from workload tokens
+        warm_rids = []
+        for name in names:                  # jit warmup per model (prefill
+            for _ in range(2):              # + decode + prefix-hit CoW)
+                warm_rids.append(fleet.submit(model=name, prompt=wp,
+                                              max_new_tokens=2))
+        fleet.run()
+        for _, _, eng in fleet._engines():
+            # warmup requests take pages of their own; restart the peak
+            # high-water mark from the (now idle) pool so the
+            # surplus-borrow sentinel below measures the workload, not
+            # the warmup (all warm requests have finished: live = 0)
+            eng.metrics.peak_pages_in_use = eng.policy.pages_in_use()
+        for name, p, g in reqs:
+            fleet.submit(model=name, prompt=p, max_new_tokens=g)
+        t0 = time.perf_counter()
+        fleet.run()
+        wall = time.perf_counter() - t0
+        done = {rid: r for rid, r in fleet.finished().items()
+                if rid not in warm_rids}
+        toks = sum(len(r.generated) for r in done.values())
+        per_model = {}
+        for rid, r in sorted(done.items()):
+            name, _ = fleet.route(rid)
+            pm = per_model.setdefault(
+                name, {"requests": 0, "tokens": 0, "ttft_s": []})
+            pm["requests"] += 1
+            pm["tokens"] += len(r.generated)
+            pm["ttft_s"].append(r.t_first_token - r.t_submit)
+        m = fleet.metrics_snapshot()
+        heavy_eng = fleet.group(names[0]).engines[0]
+        rec = {
+            "name": f"fleet_{'shared' if shared else 'static'}",
+            "tokens_per_s": toks / max(wall, 1e-9),
+            "tokens": toks, "wall_s": wall, "requests": len(done),
+            "preemptions": m["fleet"]["preemptions"],
+            "heavy_floor": floors[0],
+            "heavy_peak_pages": heavy_eng.metrics.peak_pages_in_use,
+            "models": {
+                name: {"requests": pm["requests"], "tokens": pm["tokens"],
+                       "tokens_per_s": pm["tokens"] / max(wall, 1e-9),
+                       "ttft_mean_s": sum(pm["ttft_s"]) / len(pm["ttft_s"])}
+                for name, pm in per_model.items()},
+        }
+        outs = {rid: done[rid].generated for rid in done}
+        return rec, outs
+
+    # interleave reps and score the median aggregate tokens/s so one
+    # CPU hiccup cannot decide the comparison either way
+    reps = {False: [], True: []}
+    for _ in range(args.fleet_reps):
+        for shared in (False, True):
+            reps[shared].append(one_rep(shared))
+    results, outputs = {}, {}
+    for shared in (False, True):
+        runs = sorted(reps[shared], key=lambda ro: ro[0]["tokens_per_s"])
+        rec, outs = runs[len(runs) // 2]                 # median rep
+        rec["tokens_per_s_reps"] = [r[0]["tokens_per_s"]
+                                    for r in reps[shared]]
+        key = "shared" if shared else "static"
+        results[key] = rec
+        outputs[key] = outs
+        print(f"{rec['name']}[{total}x{ps}],"
+              f"{rec['tokens_per_s']:.2f},"
+              f"tokens={rec['tokens']};wall_s={rec['wall_s']:.2f};"
+              f"heavy_peak_pages={rec['heavy_peak_pages']}"
+              f"/floor={rec['heavy_floor']};"
+              f"preemptions={rec['preemptions']:.0f}")
+
+    assert outputs["shared"] == outputs["static"], \
+        "the budget split changed the generated tokens"
+    assert results["shared"]["heavy_peak_pages"] > \
+        results["shared"]["heavy_floor"], \
+        "shared mode never borrowed surplus — raise the load skew"
+    ratio = results["shared"]["tokens_per_s"] / \
+        max(results["static"]["tokens_per_s"], 1e-9)
+    print(f"speedup,{ratio:.2f},fleet_shared_vs_static_tokens_per_s")
+    return {"static": results["static"], "shared": results["shared"],
+            "tokens_per_s_ratio": ratio,
+            "heavy_model": names[0], "light_model": names[1],
+            "budget_pages": total,
+            "token_identical": True}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -543,6 +704,25 @@ def main():
     ap.add_argument("--slo-reps", type=int, default=3,
                     help="interleaved repetitions per admission policy; "
                          "the median premium TTFT is scored")
+    ap.add_argument("--fleet-arch2", default="llama3-8b",
+                    help="second (lightly loaded) model for the fleet "
+                         "bench; --arch is the heavy one")
+    ap.add_argument("--fleet-requests", type=int, default=24,
+                    help="request count for the multi-model fleet bench "
+                         "(7 of every 8 go to the heavy model)")
+    ap.add_argument("--fleet-budget-tokens", type=int, default=320,
+                    help="TOTAL KV budget shared by both fleet models")
+    ap.add_argument("--fleet-max-new", type=int, default=32,
+                    help="heavy-model generation budget per request "
+                         "(workload 5)")
+    ap.add_argument("--fleet-light-gen", type=int, default=6,
+                    help="light-model generation budget per request "
+                         "(workload 5)")
+    ap.add_argument("--fleet-seats", type=int, default=8,
+                    help="seats per fleet engine (workload 5)")
+    ap.add_argument("--fleet-reps", type=int, default=3,
+                    help="interleaved repetitions per budget split; the "
+                         "median aggregate tokens/s is scored")
     ap.add_argument("--json-out", default="BENCH_serving.json")
     args = ap.parse_args()
 
@@ -554,12 +734,13 @@ def main():
     shared = bench_shared_prefix(cfg, params, args)
     lazy = bench_lazy_growth(cfg, params, args)
     slo = bench_slo_classes(cfg, params, args)
+    fleet = bench_fleet(cfg, params, args)
 
     out = {"arch": args.arch, "seed": args.seed,
            "budget_tokens": args.budget_tokens,
            "page_size": args.page_size,
            "skewed": skewed, "shared_prefix": shared,
-           "lazy_growth": lazy, "slo_classes": slo}
+           "lazy_growth": lazy, "slo_classes": slo, "fleet": fleet}
     with open(args.json_out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"# wrote {args.json_out}")

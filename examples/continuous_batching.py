@@ -22,15 +22,15 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.launch.serve import (add_sampling_args, add_slo_args,
-                                sampling_from_args)
+from repro.launch.serve import (add_model_arg, add_sampling_args,
+                                add_slo_args, sampling_from_args)
 from repro.models import model as M
 from repro.runtime.serving import ServingEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b")
+    add_model_arg(ap)   # --model/--arch via the config registry
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--mixed-classes", action="store_true",

@@ -21,16 +21,19 @@ docs/serving.md.
 """
 import argparse
 
-from repro.launch.serve import (add_sampling_args, add_slo_args,
-                                sampling_from_args, serve, serve_paged)
+from repro.launch.serve import (add_model_arg, add_sampling_args,
+                                add_slo_args, sampling_from_args, serve,
+                                serve_paged)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=("batch", "paged"), default="batch")
-    ap.add_argument("--arch", default="gemma3-12b",
-                    help="gemma3 exercises the 5:1 local:global attention "
-                         "cache (sliding-window + global layers)")
+    # --model/--arch resolves through configs.registry (module-style
+    # aliases like gemma3_12b work; unknown names error naming the flag).
+    # gemma3 exercises the 5:1 local:global attention cache
+    # (sliding-window + global layers).
+    add_model_arg(ap, default="gemma3-12b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=None,
                     help="fixed prompt length (batch default 32; the "

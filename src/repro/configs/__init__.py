@@ -2,4 +2,4 @@ from repro.configs.base import (  # noqa: F401
     ModelConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES, reduced_config)
 from repro.configs.registry import (  # noqa: F401
     ARCH_IDS, get_config, get_shape, cell_supported, input_specs, input_axes,
-    make_example_batch)
+    make_example_batch, resolve_arch)

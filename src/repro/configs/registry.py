@@ -30,6 +30,25 @@ _MODULES = {
 
 ARCH_IDS = tuple(_MODULES)
 
+# module-style aliases: "llama3_8b" -> "llama3-8b" etc., so CLI specs can
+# use either the registry id or the config module's name
+_ALIASES = {mod: arch for arch, mod in _MODULES.items()}
+
+
+def resolve_arch(name: str) -> str:
+    """Canonical registry id for ``name`` — the id itself or a
+    module-style alias (``llama3_8b`` for ``llama3-8b``).
+
+    Raises:
+      KeyError: unknown name; the message lists every known id and
+          alias so CLI flag errors are self-explanatory."""
+    if name in _MODULES:
+        return name
+    if name in _ALIASES:
+        return _ALIASES[name]
+    raise KeyError(f"unknown model {name!r}; known: {sorted(_MODULES)} "
+                   f"(aliases: {sorted(_ALIASES)})")
+
 
 def get_config(arch_id: str) -> ModelConfig:
     if arch_id not in _MODULES:

@@ -14,10 +14,17 @@ select stochastic sampling, deterministic per (seed, request, step).
 ``--eos-id`` stops engine requests early (static batch decodes lockstep
 and ignores it).
 
+``serve_fleet`` (``--fleet``) drives a ``runtime.router.ModelFleet``:
+several models — ``--models name[:replicas],...`` — served from one
+process under one shared ``--total-pages`` host budget, with fleet-wide
+metrics per model (see docs/serving.md §"Multi-model fleet").
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
       --batch 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --engine paged \
       --arch qwen3-1.7b --requests 8 --gen 16 --temperature 0.8 --top-p 0.95
+  PYTHONPATH=src python -m repro.launch.serve --fleet \
+      --models qwen3-1.7b:2,llama3-8b --total-pages 64 --requests 12
 """
 from __future__ import annotations
 
@@ -29,10 +36,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, reduced_config, make_example_batch
+from repro.configs import (get_config, make_example_batch, reduced_config,
+                           resolve_arch)
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.parallel.sharding import rules_for_mesh, DEFAULT_RULES
+from repro.runtime.router import FleetModel, ModelFleet, parse_models_spec
 from repro.runtime.sampler import Sampler, SamplingParams
 from repro.runtime.serving import PagedServingEngine
 
@@ -164,6 +173,82 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
     return {"finished": done, "metrics": eng.metrics.snapshot()}
 
 
+def serve_fleet(models, *, requests: int = 12, gen: int = 8,
+                page_size: int = 16, total_pages: int = 64,
+                max_seats: int = 4, prefill_chunk: int = 16,
+                reduced: bool = True, seed: int = 0,
+                eos_id: Optional[int] = None,
+                sampling: Optional[SamplingParams] = None,
+                prefix_cache: bool = True,
+                max_seq_len: Optional[int] = None,
+                prompt_len: Optional[int] = None,
+                lazy_pages: bool = True, watermark: float = 0.05,
+                priority: str = "standard",
+                deadline_ms: Optional[float] = None,
+                admission: str = "fcfs", aging_ticks: int = 64,
+                selection: str = "least-loaded"):
+    """Drive a multi-model fleet over one mixed request stream.
+
+    ``models`` is a ``--models``-style spec string
+    (``llama3-8b:2,qwen3-1.7b``; module-style aliases like ``llama3_8b``
+    resolve too) or a pre-parsed [(name, replicas), ...] list.  Every
+    engine in the fleet shares one ``total_pages`` host budget; requests
+    cycle across the models round-robin and rids are fleet-global, so
+    per-request outputs match dedicated solo engines.  Returns the
+    finished requests plus the fleet metrics snapshot (per-model
+    tokens/s, TTFT, prefix hits, preemptions, SLO classes, budget
+    accounting)."""
+    if isinstance(models, str):
+        try:
+            models = parse_models_spec(models)
+        except ValueError as e:
+            raise ValueError(f"--models: {e}") from None
+    try:
+        models = [(resolve_arch(name), reps) for name, reps in models]
+    except KeyError as e:
+        raise ValueError(f"--models: {e.args[0]}") from None
+    if max_seq_len is None:
+        max_seq_len = (prompt_len if prompt_len else 3 * page_size) + gen
+    if prompt_len is not None and prompt_len + gen > max_seq_len:
+        raise ValueError(
+            f"--prompt-len {prompt_len} + --gen {gen} exceeds "
+            f"--max-seq-len {max_seq_len}")
+    if prompt_len is None and max_seq_len - gen < 2:
+        raise ValueError(
+            f"--max-seq-len {max_seq_len} leaves no room for prompts "
+            f"after --gen {gen}; raise it or pass --prompt-len")
+    entries = []
+    for i, (name, reps) in enumerate(models):
+        cfg = get_config(name)
+        if reduced:
+            cfg = reduced_config(cfg)
+        params = M.init_params(M.param_specs(cfg),
+                               jax.random.PRNGKey(seed + i),
+                               dtype=jnp.float32)
+        entries.append(FleetModel(name, cfg, params, replicas=reps))
+    fleet = ModelFleet(entries, total_pages=total_pages,
+                       page_size=page_size, max_seats=max_seats,
+                       max_seq_len=max_seq_len,
+                       prefill_chunk=prefill_chunk, selection=selection,
+                       prefix_cache=prefix_cache, lazy_pages=lazy_pages,
+                       watermark=watermark, admission=admission,
+                       aging_ticks=aging_ticks)
+    rng = np.random.default_rng(seed)
+    for i in range(requests):
+        name, _ = models[i % len(models)]
+        cfg = fleet.group(name).cfg
+        plen = (prompt_len if prompt_len
+                else int(rng.integers(1, max_seq_len - gen)))
+        fleet.submit(model=name,
+                     prompt=rng.integers(0, cfg.vocab_size,
+                                         plen).astype(np.int32),
+                     max_new_tokens=int(rng.integers(2, gen + 1)),
+                     eos_id=eos_id, sampling=sampling,
+                     priority=priority, deadline_ms=deadline_ms)
+    done = fleet.run()
+    return {"finished": done, "metrics": fleet.metrics_snapshot()}
+
+
 def add_sampling_args(ap: argparse.ArgumentParser) -> None:
     """Shared CLI sampling/termination flags (also used by examples)."""
     ap.add_argument("--eos-id", type=int, default=None,
@@ -200,10 +285,43 @@ def sampling_from_args(args) -> SamplingParams:
                           top_p=args.top_p, seed=args.seed)
 
 
+def model_name(name: str) -> str:
+    """argparse ``type=`` resolver for ``--model``/``--arch`` flags:
+    canonicalizes registry ids and module-style aliases, and turns an
+    unknown name into an argparse error that names the offending flag
+    (``argument --model/--arch: ...``) and lists every known model."""
+    try:
+        return resolve_arch(name)
+    except KeyError as e:
+        raise argparse.ArgumentTypeError(e.args[0]) from None
+
+
+def add_model_arg(ap: argparse.ArgumentParser,
+                  default: str = "qwen3-1.7b") -> None:
+    """Shared ``--model`` (alias ``--arch``) flag resolving through the
+    config registry — also used by the serving examples."""
+    ap.add_argument("--model", "--arch", dest="arch", type=model_name,
+                    default=default,
+                    help="registry model name (module-style aliases like "
+                         f"llama3_8b work; default {default})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=("batch", "paged"), default="batch")
-    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--fleet", action="store_true",
+                    help="serve a multi-model fleet (--models) instead of "
+                         "one engine; implies the paged engine")
+    ap.add_argument("--models", default="qwen3-1.7b:2,llama3-8b",
+                    help="fleet spec: comma-separated name[:replicas], "
+                         "e.g. llama3-8b:2,qwen3-1.7b (--fleet mode)")
+    ap.add_argument("--selection", choices=("least-loaded", "round-robin"),
+                    default="least-loaded",
+                    help="replica selection policy (--fleet mode)")
+    ap.add_argument("--total-pages", type=int, default=64,
+                    help="shared host page budget across all fleet "
+                         "engines (--fleet mode)")
+    add_model_arg(ap)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=None,
                     help="fixed prompt length (batch default 32; the "
@@ -229,6 +347,44 @@ def main():
     add_slo_args(ap)
     args = ap.parse_args()
     sampling = sampling_from_args(args)
+    if args.fleet:
+        try:
+            r = serve_fleet(args.models, requests=args.requests,
+                            gen=args.gen, page_size=args.page_size,
+                            total_pages=args.total_pages, seed=args.seed,
+                            eos_id=args.eos_id, sampling=sampling,
+                            prefix_cache=not args.no_prefix_cache,
+                            max_seq_len=args.max_seq_len,
+                            prompt_len=args.prompt_len,
+                            lazy_pages=args.lazy_pages,
+                            watermark=args.watermark,
+                            priority=args.priority,
+                            deadline_ms=args.deadline_ms,
+                            admission=args.admission,
+                            aging_ticks=args.aging_ticks,
+                            selection=args.selection)
+        except ValueError as e:
+            ap.error(str(e))
+        m = r["metrics"]
+        f = m["fleet"]
+        print(f"[serve.fleet] {f['completed']:.0f} requests "
+              f"{f['generated_tokens']:.0f} tokens in "
+              f"{f['wall_s'] * 1e3:.0f}ms ({f['tokens_per_s']:.1f} tok/s) "
+              f"across {len(m['models'])} models; "
+              f"budget {m['budget']['total_pages']} pages "
+              f"(surplus {m['budget']['surplus_pages']})")
+        for name, mm in m["models"].items():
+            print(f"[serve.fleet]   model={name} "
+                  f"replicas={len(mm['replicas'])} "
+                  f"completed={mm['completed']:.0f} "
+                  f"tok/s={mm['tokens_per_s']:.1f} "
+                  f"ttft_avg={mm['ttft_avg_s'] * 1e3:.0f}ms "
+                  f"prefix_hit_rate={mm['prefix_hit_rate']:.2f} "
+                  f"preemptions={mm['preemptions']:.0f}")
+        rid0 = min(r["finished"])
+        print("[serve.fleet] sample tokens:",
+              r["finished"][rid0].generated[:12])
+        return
     if args.engine == "paged":
         r = serve_paged(args.arch, requests=args.requests, gen=args.gen,
                         page_size=args.page_size, num_pages=args.num_pages,

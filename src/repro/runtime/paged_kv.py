@@ -120,6 +120,13 @@ class BlockManager:
         # bumped on any state change that could alter a future alloc or
         # match — admission caches its failed attempt against this
         self.version = 0
+        # optional shared host budget (runtime.router.HostBudget): when
+        # set, can_alloc also asks the budget whether THIS manager may
+        # take n more live pages, and local state changes invalidate the
+        # sibling managers' versions (a starved head in another engine
+        # must re-attempt admission when pages free up here)
+        self._budget = None
+        self._budget_key = None
 
     # -- accounting -----------------------------------------------------------
 
@@ -150,7 +157,43 @@ class BlockManager:
         return max(1, math.ceil(tokens / self.page_size))
 
     def can_alloc(self, n: int) -> bool:
-        return n <= self.available
+        """Whether ``alloc(n)`` would succeed: enough local pages AND —
+        when this manager is registered with a shared
+        :class:`~repro.runtime.router.HostBudget` — the host budget
+        grants this engine ``n`` more live pages (its floor plus
+        whatever surplus its siblings have not borrowed)."""
+        if n > self.available:
+            return False
+        return self._budget is None or self._budget.allows(self._budget_key, n)
+
+    def attach_budget(self, budget, key) -> None:
+        """Register this manager under a shared host budget (called by
+        ``HostBudget.register``).  Must happen before any allocation —
+        the budget gate assumes it has seen every live page.
+
+        Raises:
+          ValueError: a budget is already attached, or pages are
+              already live (either would corrupt the budget's floor /
+              borrowed accounting)."""
+        if self._budget is not None:
+            raise ValueError(
+                f"BlockManager already answers to a budget as "
+                f"{self._budget_key!r}; cannot attach a second one")
+        if self._ref:
+            raise ValueError(
+                f"attach_budget requires a pristine manager; {len(self._ref)} "
+                "pages are already live and would escape budget accounting")
+        self._budget = budget
+        self._budget_key = key
+
+    def _bump(self) -> None:
+        """Version bump on any state change that could alter a future
+        alloc or prefix match; with a shared budget, sibling managers
+        are invalidated too (pages freed here may unblock admission
+        there)."""
+        self.version += 1
+        if self._budget is not None:
+            self._budget.invalidate(self)
 
     def owner(self, page: int) -> Optional[int]:
         """One current holder of ``page`` (debugging aid): the rid that
@@ -190,7 +233,7 @@ class BlockManager:
             self._ref[pg] = 1
             self._owner[pg] = rid
         self.peak_in_use = max(self.peak_in_use, self.in_use)
-        self.version += 1
+        self._bump()
         return pages
 
     def try_grow(self, rid: int) -> Optional[int]:
@@ -226,7 +269,7 @@ class BlockManager:
         else:
             raise ValueError(f"acquire of unallocated page {page}")
         self.peak_in_use = max(self.peak_in_use, self.in_use)
-        self.version += 1
+        self._bump()
 
     def free(self, pages: List[int]) -> None:
         """Drop one reference per page.  At refcount 0 a page returns to
@@ -247,7 +290,7 @@ class BlockManager:
                     self._reclaim[pg] = None      # most-recently released
                 else:
                     self._free.append(pg)
-        self.version += 1
+        self._bump()
 
     release = free      # refcount-decrement reading of the same operation
 
@@ -268,7 +311,7 @@ class BlockManager:
             return
         kids[tail] = page
         self._page_key[page] = (parent, tail)
-        self.version += 1
+        self._bump()
 
     def match_prefix(self, prompt) -> PrefixMatch:
         """Longest cached page-aligned prefix of ``prompt`` (plus an
@@ -418,6 +461,59 @@ class EngineMetrics:
         for cls, n in (pages_by_class or {}).items():
             self.peak_pages_by_class[cls] = \
                 max(self.peak_pages_by_class.get(cls, 0), n)
+
+    @classmethod
+    def merged(cls, parts: List["EngineMetrics"]) -> "EngineMetrics":
+        """Aggregate metrics across several engines (a replica group or
+        a whole :class:`~repro.runtime.router.ModelFleet`): counters and
+        per-class tallies sum, TTFT samples concatenate (so the merged
+        ``snapshot()`` reports fleet-level percentiles), and the
+        throughput window spans the earliest start to the latest
+        activity across the parts.
+
+        ``peak_*`` figures are the SUM of per-engine peaks — an upper
+        bound on concurrent fleet-wide usage (per-engine peaks need not
+        be simultaneous); ``ticks`` is the max (fleet engines tick in
+        lockstep, idle engines skip).  The parts are not mutated."""
+        out = cls()
+        for m in parts:
+            out.page_capacity += m.page_capacity
+            out.submitted += m.submitted
+            out.admitted += m.admitted
+            out.completed += m.completed
+            out.ticks = max(out.ticks, m.ticks)
+            out.prefill_tokens += m.prefill_tokens
+            out.cached_prompt_tokens += m.cached_prompt_tokens
+            out.first_tokens += m.first_tokens
+            out.decode_tokens += m.decode_tokens
+            out.preemptions += m.preemptions
+            out.pages_in_use += m.pages_in_use
+            out.peak_pages_in_use += m.peak_pages_in_use
+            out.cached_pages += m.cached_pages
+            out.evictions += m.evictions
+            out.queued += m.queued
+            out.active += m.active
+            out.peak_active += m.peak_active
+            out.ttft_s.extend(m.ttft_s)
+            for cls_name, ts in m.ttft_s_by_class.items():
+                out.ttft_s_by_class.setdefault(cls_name, []).extend(ts)
+            for acc, src in (
+                    (out.completed_by_class, m.completed_by_class),
+                    (out.preemptions_by_class, m.preemptions_by_class),
+                    (out.deadline_requests_by_class,
+                     m.deadline_requests_by_class),
+                    (out.deadline_misses_by_class,
+                     m.deadline_misses_by_class),
+                    (out.peak_pages_by_class, m.peak_pages_by_class)):
+                for k, v in src.items():
+                    acc[k] = acc.get(k, 0) + v
+            if m._t_start is not None:
+                out._t_start = (m._t_start if out._t_start is None
+                                else min(out._t_start, m._t_start))
+            if m._t_last is not None:
+                out._t_last = (m._t_last if out._t_last is None
+                               else max(out._t_last, m._t_last))
+        return out
 
     def class_snapshot(self) -> Dict[str, Dict[str, float]]:
         """Per-priority-class summary: completed count, TTFT mean /

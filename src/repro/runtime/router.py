@@ -1,0 +1,529 @@
+"""Multi-model fleet router: N serving engines behind one submit() API.
+
+One process, one shared host, several models — the operating reality of
+a managed GPU cluster where many LLM workloads of different shapes
+coexist on the same bare-metal hosts.  A :class:`ModelFleet` owns a set
+of :class:`~repro.runtime.serving.PagedServingEngine` instances —
+possibly different architectures, each with its own params and KV page
+pool — and routes requests to them behind a single
+``submit(model=..., prompt=...)`` call plus an outer tick loop that
+interleaves ``engine.step()`` across the fleet::
+
+    submit(model, prompt, priority, deadline_ms, session_id)
+         │
+         ▼
+    ReplicaGroup[model] ── session affinity ──► home replica
+         │ (no session / first turn)
+         ▼
+    replica selection          LeastLoaded (default) | RoundRobin
+         │
+         ▼
+    engine.submit(prompt, rid=<fleet-global rid>)
+         │                         │
+         ▼                         ▼
+    ModelFleet.step()        HostBudget — shared page budget:
+      engine.step() per        per-model floors, surplus
+      engine with work         redistributed at admission time
+
+The three load-bearing properties:
+
+**rid namespacing.**  The fleet assigns every request's rid from one
+fleet-global counter, so each engine's rid set is a disjoint slice of
+one monotonic sequence and sampler keys ``(seed, rid, step)`` never
+collide across the fleet — two engines serving same-seed stochastic
+requests produce independent streams.  Because the rid is fixed at
+submit time (before and independent of routing), a routed request's
+token stream is bit-identical to the same request submitted to a
+dedicated solo engine with the same explicit rid: routing decides
+*where* a request runs, never *which* tokens it produces
+(tests/test_router.py fuzzes this against random routing schedules).
+
+**shared host budget.**  All engines' page pools answer to one
+:class:`HostBudget`: each model guarantees itself ``floor`` pages
+(default: enough for one max-length request, so preempt-and-recompute
+always converges), and the remaining surplus is granted to whichever
+engine asks first, re-evaluated at every admission and growth attempt
+(``BlockManager.can_alloc`` consults the budget; freeing pages in one
+engine invalidates its siblings' admission caches so their starved
+heads re-attempt).  A busy model borrows an idle model's headroom and
+hands it back under pressure — no static partitioning decision.
+
+**session affinity.**  A ``session_id``'s follow-up turns route to the
+replica that served its earlier turns, where the session's prompt
+pages are still registered in that replica's prefix index — the
+multi-turn prefix hit is only warm on the home replica.
+
+Fleet-level observability aggregates per-replica
+:class:`~repro.runtime.paged_kv.EngineMetrics` via
+``EngineMetrics.merged``: per-model tokens/s, TTFT percentiles,
+prefix-hit rate, preemptions and SLO-class breakdowns, surfaced through
+``launch/serve.py --fleet`` and benchmark workload 5
+(``benchmarks/serving_paged.py``).  See docs/serving.md §"Multi-model
+fleet".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.models import model as M
+from repro.parallel.sharding import LogicalRules, SINGLE_DEVICE_RULES
+from repro.runtime.paged_kv import BlockManager, EngineMetrics
+from repro.runtime.sampler import Sampler, SamplingParams
+from repro.runtime.serving import (DEFAULT_PRIORITY, PagedServingEngine,
+                                   Request, SchedulerStallError)
+
+
+class HostBudget:
+    """One total-page figure carved across engines: floors + surplus.
+
+    Each registered :class:`BlockManager` is guaranteed ``floor`` live
+    pages; the surplus (``total - sum(floors)``) belongs to no engine
+    and is granted on demand: an engine may hold
+    ``floor + (surplus - pages its siblings have borrowed)`` live pages
+    at any instant.  The grant is re-evaluated at every allocation
+    (:meth:`allows` is called from ``BlockManager.can_alloc``), so the
+    split between models tracks the live load instead of a static
+    partition — *surplus redistribution at admission time*.
+
+    Reclaimable prefix-cache pages do not count against the budget:
+    they are evictable at will by their own engine, so only *live*
+    (referenced) pages represent un-reclaimable host commitment.
+
+    Freeing pages in one engine must un-starve queued admissions in the
+    others, so any registered manager's state change bumps its
+    siblings' ``version`` counters (:meth:`invalidate`) — the paged
+    admission path caches failed attempts against that counter.
+    """
+
+    def __init__(self, total_pages: int):
+        if total_pages < 1:
+            raise ValueError(f"total_pages must be >= 1, got {total_pages}")
+        self.total = total_pages
+        self._floors: Dict[object, int] = {}
+        self._managers: Dict[object, BlockManager] = {}
+
+    @property
+    def surplus(self) -> int:
+        """Pages beyond the floors, shared on demand."""
+        return self.total - sum(self._floors.values())
+
+    def register(self, key, bm: BlockManager, floor: int) -> None:
+        """Put ``bm`` under this budget with a guaranteed ``floor``.
+
+        Raises:
+          ValueError: duplicate key, non-positive floor, or floors
+              exceeding the total (the surplus must stay >= 0)."""
+        if key in self._managers:
+            raise ValueError(f"budget key {key!r} already registered")
+        if floor < 1:
+            raise ValueError(f"floor must be >= 1, got {floor} for {key!r}")
+        if sum(self._floors.values()) + floor > self.total:
+            raise ValueError(
+                f"floors exceed the host budget: registering {key!r} with "
+                f"floor {floor} on top of {sum(self._floors.values())} "
+                f"already-guaranteed pages > total {self.total}")
+        bm.attach_budget(self, key)     # raises first: a rejected manager
+        self._floors[key] = floor       # must leave this budget untouched
+        self._managers[key] = bm
+
+    def borrowed(self, key) -> int:
+        """Live pages ``key`` currently holds beyond its floor."""
+        return max(0, self._managers[key].in_use - self._floors[key])
+
+    def allows(self, key, n: int) -> bool:
+        """Whether engine ``key`` may take ``n`` more live pages now:
+        its post-alloc overshoot past its floor, plus what the other
+        engines have already borrowed, must fit in the surplus."""
+        bm = self._managers[key]
+        over = max(0, bm.in_use + n - self._floors[key])
+        others = sum(self.borrowed(k) for k in self._managers if k != key)
+        return over + others <= self.surplus
+
+    def invalidate(self, source: BlockManager) -> None:
+        """Bump every *other* registered manager's version: pages freed
+        (or taken) in ``source`` change what their next admission
+        attempt could get, so cached failed attempts must retry."""
+        for bm in self._managers.values():
+            if bm is not source:
+                bm.version += 1
+
+    def usage(self) -> Dict[str, object]:
+        """Budget accounting snapshot: total / surplus plus per-engine
+        floor, live pages, and borrowed-beyond-floor counts."""
+        return {
+            "total_pages": self.total,
+            "surplus_pages": self.surplus,
+            "engines": {
+                str(k): {"floor": self._floors[k],
+                         "in_use": self._managers[k].in_use,
+                         "borrowed": self.borrowed(k)}
+                for k in sorted(self._managers, key=str)},
+        }
+
+
+@dataclasses.dataclass
+class FleetModel:
+    """One model's entry in a :class:`ModelFleet`.
+
+    name: routing key (the registry arch id by convention).
+    cfg: the model's (usually reduced) ModelConfig.
+    params: the model's parameter pytree — shared read-only across the
+        model's replicas (JAX arrays are immutable).
+    replicas: engine count for this model (>= 1); each replica gets its
+        own KV page pool and prefix index.
+    floor: guaranteed live pages per replica under the shared
+        :class:`HostBudget`; None = enough pages for one max-length
+        request (the minimum that keeps preempt-and-recompute
+        convergent)."""
+    name: str
+    cfg: object
+    params: object
+    replicas: int = 1
+    floor: Optional[int] = None
+
+
+@dataclasses.dataclass
+class ReplicaGroup:
+    """A model's replicas inside the fleet (internal)."""
+    name: str
+    cfg: object
+    engines: List[PagedServingEngine]
+    floor: int
+
+
+class LeastLoaded:
+    """Default replica selection: fewest (active + queued) requests
+    first, then fewest live pages, then lowest replica index — new work
+    lands on the replica with the most immediate headroom."""
+
+    name = "least-loaded"
+
+    def select(self, group: ReplicaGroup) -> int:
+        """Index of the least-loaded replica in ``group``."""
+        return min(
+            range(len(group.engines)),
+            key=lambda i: (len(group.engines[i].seats)
+                           + len(group.engines[i].queue),
+                           group.engines[i].policy.pages_in_use(), i))
+
+
+class RoundRobin:
+    """Alternative replica selection: strict rotation per model,
+    ignoring load — useful as a predictable baseline and for tests."""
+
+    name = "round-robin"
+
+    def __init__(self):
+        self._next: Dict[str, int] = {}
+
+    def select(self, group: ReplicaGroup) -> int:
+        """Next replica index in rotation for ``group``."""
+        i = self._next.get(group.name, 0) % len(group.engines)
+        self._next[group.name] = i + 1
+        return i
+
+
+def _make_selection(selection):
+    """Resolve a selection spec — ``"least-loaded"``, ``"round-robin"``
+    or an object with ``select(group) -> int`` — into a policy."""
+    if isinstance(selection, str):
+        if selection == "least-loaded":
+            return LeastLoaded()
+        if selection == "round-robin":
+            return RoundRobin()
+        raise ValueError(f"unknown replica selection {selection!r}; "
+                         "expected 'least-loaded' or 'round-robin'")
+    if not hasattr(selection, "select"):
+        raise TypeError(f"selection policy {selection!r} has no select()")
+    return selection
+
+
+class ModelFleet:
+    """N paged serving engines — several models, optional replicas —
+    behind one submit() API, one shared host page budget, and one outer
+    tick loop (see module docstring).
+
+    Every replica's physical pool is sized ``floor + surplus`` usable
+    pages so it can absorb the whole surplus when its siblings are
+    idle; the :class:`HostBudget` keeps the *live* total across the
+    fleet within ``total_pages``.  Engine knobs (``page_size``,
+    ``max_seats``, ``max_seq_len``, ``prefill_chunk``, sampling,
+    admission) apply fleet-wide.
+    """
+
+    default_max_ticks = 100_000
+
+    def __init__(self, models: Sequence[FleetModel], *,
+                 total_pages: int, page_size: int = 16,
+                 max_seats: int = 8, max_seq_len: int = 256,
+                 prefill_chunk: int = 32, selection="least-loaded",
+                 rules: LogicalRules = SINGLE_DEVICE_RULES,
+                 opts: Optional[M.RunOptions] = None,
+                 sampler: Optional[Sampler] = None,
+                 prefix_cache: bool = True, lazy_pages: bool = True,
+                 watermark: float = 0.05, admission="fcfs",
+                 aging_ticks: int = 64):
+        """Build one engine per (model, replica) and carve the budget.
+
+        Args:
+          models: :class:`FleetModel` entries; names must be unique and
+              every cfg must support the paged KV layout.
+          total_pages: the host's total live-page budget, shared across
+              every engine in the fleet.
+          selection: replica selection policy — ``"least-loaded"``
+              (default), ``"round-robin"``, or an object with
+              ``select(group) -> int``.
+          (remaining args: per-engine knobs, as on
+              :class:`PagedServingEngine`.)
+
+        Raises:
+          ValueError: no models, duplicate names, replicas < 1, a floor
+              too small to hold one max-length request, or floors that
+              exceed ``total_pages``.
+        """
+        if not models:
+            raise ValueError("a fleet needs at least one model")
+        names = [m.name for m in models]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate model names in fleet: {names}")
+        n_tables = max(1, -(-max_seq_len // page_size))
+        floors: List[Tuple[FleetModel, int]] = []
+        for fm in models:
+            if fm.replicas < 1:
+                raise ValueError(
+                    f"model {fm.name!r}: replicas must be >= 1, "
+                    f"got {fm.replicas}")
+            floor = n_tables if fm.floor is None else fm.floor
+            if floor < n_tables:
+                raise ValueError(
+                    f"model {fm.name!r}: floor {floor} pages cannot hold "
+                    f"one max-length request ({n_tables} pages at "
+                    f"max_seq_len={max_seq_len}, page_size={page_size}); "
+                    "preempt-and-recompute could never converge")
+            floors.append((fm, floor))
+        total_floor = sum(f * fm.replicas for fm, f in floors)
+        if total_floor > total_pages:
+            raise ValueError(
+                f"per-model floors need {total_floor} pages > "
+                f"total_pages={total_pages}; raise the budget or lower "
+                "replicas/floors")
+
+        self.budget = HostBudget(total_pages)
+        self.page_size = page_size
+        self.max_seq_len = max_seq_len
+        self.selection = _make_selection(selection)
+        self._groups: Dict[str, ReplicaGroup] = {}
+        self._sessions: Dict[Tuple[str, str], int] = {}
+        self._routes: Dict[int, Tuple[str, int]] = {}   # rid -> (model, idx)
+        self._next_rid = 0
+        self._tick = 0
+        surplus = total_pages - total_floor
+        for fm, floor in floors:
+            engines = []
+            for i in range(fm.replicas):
+                eng = PagedServingEngine(
+                    fm.cfg, fm.params, page_size=page_size,
+                    num_pages=floor + surplus + 1,   # +1: scratch page
+                    max_seats=max_seats, max_seq_len=max_seq_len,
+                    prefill_chunk=prefill_chunk, rules=rules, opts=opts,
+                    sampler=sampler, prefix_cache=prefix_cache,
+                    lazy_pages=lazy_pages, watermark=watermark,
+                    admission=admission, aging_ticks=aging_ticks)
+                self.budget.register((fm.name, i), eng.bm, floor)
+                engines.append(eng)
+            self._groups[fm.name] = ReplicaGroup(fm.name, fm.cfg,
+                                                 engines, floor)
+
+    # -- routing ---------------------------------------------------------------
+
+    @property
+    def models(self) -> List[str]:
+        """Routing keys, registration order."""
+        return list(self._groups)
+
+    def group(self, model: str) -> ReplicaGroup:
+        """The replica group serving ``model``.
+
+        Raises:
+          ValueError: unknown model name."""
+        try:
+            return self._groups[model]
+        except KeyError:
+            raise ValueError(f"unknown model {model!r}; fleet serves "
+                             f"{sorted(self._groups)}") from None
+
+    def home_replica(self, model: str, session_id: str) -> Optional[int]:
+        """The replica index ``session_id`` is pinned to, or None when
+        the session has not been seen on ``model``."""
+        self.group(model)
+        return self._sessions.get((model, session_id))
+
+    def submit(self, *, model: str, prompt, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               priority: str = DEFAULT_PRIORITY,
+               deadline_ms: Optional[float] = None,
+               session_id: Optional[str] = None) -> int:
+        """Route one request to a replica of ``model``; returns its
+        fleet-global rid.
+
+        A ``session_id``'s first turn picks a replica via the selection
+        policy and pins the session to it; follow-up turns go to that
+        home replica, where the session's earlier prompt pages are
+        still registered in the prefix index (the multi-turn cache is
+        replica-local).  The rid comes from the fleet-global counter —
+        see the module docstring for why that makes routing
+        token-transparent.
+
+        Raises:
+          ValueError: unknown model, or any :meth:`Scheduler.submit`
+              validation failure (priority, deadline, placement)."""
+        group = self.group(model)
+        idx = None
+        if session_id is not None:
+            idx = self._sessions.get((model, session_id))
+        if idx is None:
+            idx = (self.selection.select(group)
+                   if len(group.engines) > 1 else 0)
+            if not 0 <= idx < len(group.engines):
+                raise ValueError(
+                    f"selection policy returned replica {idx} for "
+                    f"{model!r} with {len(group.engines)} replicas")
+        rid = self._next_rid
+        group.engines[idx].submit(
+            prompt, max_new_tokens=max_new_tokens, eos_id=eos_id,
+            sampling=sampling, priority=priority, deadline_ms=deadline_ms,
+            rid=rid)
+        # commit routing state only after the engine accepted the
+        # request: a validation failure must not pin the session to a
+        # replica that holds none of its pages
+        if session_id is not None:
+            self._sessions[(model, session_id)] = idx
+        self._next_rid = rid + 1
+        self._routes[rid] = (model, idx)
+        return rid
+
+    def route(self, rid: int) -> Tuple[str, int]:
+        """(model, replica index) a submitted rid was routed to."""
+        return self._routes[rid]
+
+    # -- the outer tick loop ---------------------------------------------------
+
+    def _engines(self) -> List[Tuple[str, int, PagedServingEngine]]:
+        return [(name, i, eng)
+                for name, group in self._groups.items()
+                for i, eng in enumerate(group.engines)]
+
+    def pending(self) -> bool:
+        """Any request still queued or on a seat anywhere in the fleet."""
+        return any(eng.queue or eng.seats for _, _, eng in self._engines())
+
+    def step(self) -> None:
+        """One fleet tick: every engine with work gets one
+        ``Scheduler.step()`` (admission, one prefill chunk, one decode
+        round), in model-registration then replica order.  Idle engines
+        are skipped — their jitted steps are not dispatched and their
+        metrics windows are not diluted."""
+        self._tick += 1
+        for _, _, eng in self._engines():
+            if eng.queue or eng.seats:
+                eng.step()
+
+    def run(self, max_ticks: Optional[int] = None) -> Dict[int, Request]:
+        """Tick the fleet until every submitted request finishes.
+
+        Returns:
+          rid -> finished :class:`Request` for every request the fleet
+          has completed (including earlier ``run`` calls).
+
+        Raises:
+          SchedulerStallError: ``max_ticks`` fleet ticks elapsed with
+              work still pending; the message names each stalled
+              request as ``model/replica:rid(priority)``."""
+        if max_ticks is None:
+            max_ticks = self.default_max_ticks
+        t = 0
+        while self.pending() and t < max_ticks:
+            self.step()
+            t += 1
+        if self.pending():
+            stalled = []
+            for name, i, eng in self._engines():
+                for r in sorted(list(eng.queue) + list(eng.seats.values()),
+                                key=lambda r: r.rid):
+                    stalled.append(f"{name}/{i}:{r.rid}({r.priority})")
+            raise SchedulerStallError(
+                f"fleet run() exhausted max_ticks={max_ticks} with "
+                f"{len(stalled)} requests pending: " + ", ".join(stalled))
+        return self.finished()
+
+    def finished(self) -> Dict[int, Request]:
+        """rid -> finished :class:`Request` across the whole fleet."""
+        out: Dict[int, Request] = {}
+        for _, _, eng in self._engines():
+            for r in eng.finished:
+                out[r.rid] = r
+        return out
+
+    # -- observability ---------------------------------------------------------
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """Fleet observability: per-model and fleet-total
+        ``EngineMetrics`` snapshots (tokens/s, TTFT percentiles,
+        prefix-hit rate, preemptions, per-SLO-class breakdowns) plus
+        per-replica snapshots and the :class:`HostBudget` accounting.
+        Merged figures follow ``EngineMetrics.merged`` semantics (peaks
+        are sums of per-replica peaks)."""
+        per_model: Dict[str, object] = {}
+        for name, group in self._groups.items():
+            merged = EngineMetrics.merged([e.metrics for e in group.engines])
+            snap = merged.snapshot()
+            snap["replicas"] = [e.metrics.snapshot() for e in group.engines]
+            per_model[name] = snap
+        fleet = EngineMetrics.merged(
+            [eng.metrics for _, _, eng in self._engines()]).snapshot()
+        return {"models": per_model, "fleet": fleet,
+                "budget": self.budget.usage(), "ticks": self._tick}
+
+
+def parse_models_spec(spec: str) -> List[Tuple[str, int]]:
+    """Parse a ``--models`` fleet spec: comma-separated
+    ``name[:replicas]`` entries, e.g. ``llama3-8b:2,qwen3-1.7b`` (the
+    registry's module-style aliases like ``llama3_8b`` work too —
+    resolution happens in the caller via ``configs.resolve_arch``).
+
+    Returns:
+      [(name, replicas), ...] in spec order (names unresolved).
+
+    Raises:
+      ValueError: empty spec/entry, a non-integer or < 1 replica
+          count, or a duplicated name."""
+    entries: List[Tuple[str, int]] = []
+    if not spec.strip():
+        raise ValueError("empty --models spec")
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            raise ValueError(f"empty entry in --models spec {spec!r}")
+        name, _, count = part.partition(":")
+        name = name.strip()
+        if not name:
+            raise ValueError(f"missing model name in entry {part!r}")
+        if count:
+            try:
+                replicas = int(count)
+            except ValueError:
+                raise ValueError(
+                    f"bad replica count {count!r} in --models entry "
+                    f"{part!r}; expected name[:replicas]") from None
+        else:
+            replicas = 1
+        if replicas < 1:
+            raise ValueError(
+                f"replica count must be >= 1 in --models entry {part!r}")
+        if name in [n for n, _ in entries]:
+            raise ValueError(f"model {name!r} appears twice in --models "
+                             f"spec {spec!r}")
+        entries.append((name, replicas))
+    return entries

@@ -321,7 +321,8 @@ class Scheduler:
                eos_id: Optional[int] = None,
                sampling: Optional[SamplingParams] = None,
                priority: str = DEFAULT_PRIORITY,
-               deadline_ms: Optional[float] = None) -> int:
+               deadline_ms: Optional[float] = None,
+               rid: Optional[int] = None) -> int:
         """Queue one request; returns its engine-assigned rid.
 
         Args:
@@ -336,24 +337,41 @@ class Scheduler:
           deadline_ms: optional TTFT deadline in milliseconds from now
               (must be > 0): EDF ordering under ``slo`` admission and
               deadline-miss accounting under every policy.
+          rid: explicit request id (fleet routing — the
+              :class:`~repro.runtime.router.ModelFleet` assigns rids
+              from one fleet-global counter so sampler keys
+              ``(seed, rid, step)`` never collide across engines and a
+              routed request replays bit-identically on a solo engine
+              given the same rid).  Must keep this engine's rids
+              strictly increasing; None (default) auto-assigns.
 
         Raises:
-          ValueError: unknown priority, non-positive deadline, or a
-              prompt/budget the bound policy cannot ever place
-              (empty prompt, ``prompt + max_new_tokens`` over the
-              engine's length bound, or an infeasible page demand).
+          ValueError: unknown priority, non-positive deadline, a
+              non-monotonic explicit ``rid``, or a prompt/budget the
+              bound policy cannot ever place (empty prompt,
+              ``prompt + max_new_tokens`` over the engine's length
+              bound, or an infeasible page demand).
         """
         if priority not in PRIORITIES:
             raise ValueError(f"unknown priority {priority!r}; expected one "
                              f"of {sorted(PRIORITIES)}")
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
-        req = Request(self._next_rid, np.asarray(prompt, np.int32),
+        if rid is None:
+            rid = self._next_rid
+        elif rid < self._next_rid:
+            # rid order is load-bearing: prefill picks the lowest rid,
+            # preemption the highest, SLO ties break on rid — an engine's
+            # rids must stay strictly increasing in submit order
+            raise ValueError(
+                f"explicit rid {rid} is not monotonic: this engine has "
+                f"already assigned rids up to {self._next_rid - 1}")
+        req = Request(rid, np.asarray(prompt, np.int32),
                       max_new_tokens, eos_id, sampling or GREEDY,
                       priority=priority, deadline_ms=deadline_ms,
                       submit_tick=self._tick, t_submit=time.perf_counter())
         self.policy.validate(req)
-        self._next_rid += 1
+        self._next_rid = rid + 1
         self.queue.append(req)
         self.metrics.submitted += 1
         return req.rid

@@ -1,0 +1,466 @@
+"""Multi-model fleet router: HostBudget carving, replica selection,
+session affinity, fleet-global rid namespacing (cross-engine sampler
+isolation + routing-invariant token streams), metrics aggregation, and
+the --models CLI spec.
+
+The load-bearing claims pinned here:
+  - two engines with the same seed and overlapping raw rids produce
+    IDENTICAL stochastic streams for identical logits (the collision the
+    fleet exists to prevent) — and fleet-global rids make them
+    independent yet replay-stable;
+  - a routed request's tokens are bit-identical to the same request on
+    a dedicated solo engine given the same rid, for ANY routing
+    schedule (fuzzed with random replica selection);
+  - the shared HostBudget lets a busy model borrow an idle model's
+    pages beyond its own floor, while a static zero-surplus split caps
+    it at the floor.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config, resolve_arch
+from repro.models import model as M
+from repro.runtime.paged_kv import BlockManager, EngineMetrics
+from repro.runtime.router import (FleetModel, HostBudget, LeastLoaded,
+                                  ModelFleet, RoundRobin, _make_selection,
+                                  parse_models_spec)
+from repro.runtime.sampler import SamplingParams
+from repro.runtime.serving import PagedServingEngine, SchedulerStallError
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = reduced_config(get_config("qwen3-1.7b"))
+    params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = reduced_config(get_config("llama3-8b"))
+    params = M.init_params(M.param_specs(cfg), jax.random.PRNGKey(1))
+    return cfg, params
+
+
+KW = dict(page_size=4, max_seats=2, max_seq_len=16, prefill_chunk=4)
+N_TABLES = 4            # ceil(max_seq_len / page_size)
+
+
+def prompt_for(cfg, i, n=6):
+    return ((np.arange(n, dtype=np.int32) * (2 * i + 3) + i)
+            % cfg.vocab_size).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# HostBudget + BlockManager gate (no models involved)
+# ---------------------------------------------------------------------------
+
+class TestHostBudget:
+    def make(self, total=10, floors=(3, 3)):
+        budget = HostBudget(total)
+        bms = []
+        for i, floor in enumerate(floors):
+            bm = BlockManager(total + 1, 4, prefix_cache=False)
+            budget.register(f"m{i}", bm, floor)
+            bms.append(bm)
+        return budget, bms
+
+    def test_surplus_and_floor_accounting(self):
+        budget, (a, b) = self.make(10, (3, 3))
+        assert budget.surplus == 4
+        # A takes its floor, then borrows the whole surplus
+        floor_pages = a.alloc(3, rid=0)
+        assert floor_pages is not None and budget.borrowed("m0") == 0
+        assert a.can_alloc(4) and not a.can_alloc(5)
+        borrowed_pages = a.alloc(4, rid=0)
+        assert borrowed_pages is not None and budget.borrowed("m0") == 4
+        # B is squeezed down to its guaranteed floor, no further
+        assert b.can_alloc(3) and not b.can_alloc(4)
+        assert b.alloc(3, rid=1) is not None
+        assert not b.can_alloc(1) and b.alloc(1, rid=1) is None
+        # A hands surplus back -> B may borrow again
+        a.free(borrowed_pages[:2])
+        assert b.can_alloc(2) and not b.can_alloc(3)
+
+    def test_usage_snapshot(self):
+        budget, (a, b) = self.make(10, (3, 3))
+        a.alloc(5, rid=0)
+        u = budget.usage()
+        assert u["total_pages"] == 10 and u["surplus_pages"] == 4
+        assert u["engines"]["m0"] == {"floor": 3, "in_use": 5, "borrowed": 2}
+        assert u["engines"]["m1"]["in_use"] == 0
+
+    def test_register_validation(self):
+        budget = HostBudget(6)
+        bm = BlockManager(8, 4)
+        budget.register("a", bm, 3)
+        with pytest.raises(ValueError, match="already registered"):
+            budget.register("a", BlockManager(8, 4), 1)
+        with pytest.raises(ValueError, match="floor must be"):
+            budget.register("b", BlockManager(8, 4), 0)
+        with pytest.raises(ValueError, match="exceed the host budget"):
+            budget.register("c", BlockManager(8, 4), 4)
+        with pytest.raises(ValueError, match="total_pages"):
+            HostBudget(0)
+
+    def test_attach_requires_pristine_manager(self):
+        budget = HostBudget(6)
+        bm = BlockManager(8, 4)
+        bm.alloc(1, rid=0)
+        with pytest.raises(ValueError, match="pristine"):
+            budget.register("a", bm, 2)
+        clean = BlockManager(8, 4)
+        budget.register("a", clean, 2)
+        with pytest.raises(ValueError, match="already answers"):
+            HostBudget(6).register("b", clean, 2)
+
+    def test_cross_engine_version_invalidation(self):
+        """Freeing pages in one engine must bump its siblings' versions:
+        the paged admission path caches a failed attempt against
+        bm.version, and the pages that un-starve it can free ANYWHERE
+        in the fleet."""
+        budget, (a, b) = self.make(8, (2, 2))
+        pages = a.alloc(6, rid=0)           # floor 2 + all 4 surplus
+        assert not b.can_alloc(3)
+        v = b.version
+        a.free(pages[:2])
+        assert b.version > v                # sibling invalidated
+        assert b.can_alloc(3)
+
+    def test_reclaimable_pages_do_not_count_against_budget(self):
+        budget = HostBudget(8)
+        a = BlockManager(9, 4, prefix_cache=True)
+        b = BlockManager(9, 4, prefix_cache=True)
+        budget.register("a", a, 2)
+        budget.register("b", b, 2)
+        pages = a.alloc(6, rid=0)
+        a.register_prefix(list(range(4)), pages[0])
+        a.free(pages)                       # page parks reclaimable
+        assert a.cached == 1 and a.in_use == 0
+        # B may use the full surplus: A's cached page is evictable, not
+        # a live commitment
+        assert b.can_alloc(6)
+
+
+def test_engine_metrics_merged():
+    a = EngineMetrics(page_capacity=4)
+    b = EngineMetrics(page_capacity=6)
+    a.note_first_token("premium", 0.1, deadlined=True, missed=True)
+    b.note_first_token("batch", 0.3)
+    a.note_completion("premium")
+    b.note_completion("batch")
+    b.note_preemption("batch")
+    a.decode_tokens, b.decode_tokens = 5, 7
+    a.tick(queued=1, active=2, pages_in_use=3)
+    b.tick(queued=0, active=1, pages_in_use=4)
+    m = EngineMetrics.merged([a, b])
+    s = m.snapshot()
+    assert s["page_capacity"] == 10
+    assert s["completed"] == 2 and s["decode_tokens"] == 12
+    assert s["preemptions"] == 1
+    assert sorted(s["classes"]) == ["batch", "premium"]
+    assert s["classes"]["premium"]["deadline_misses"] == 1
+    assert m.ttft_s == [0.1, 0.3]
+    # parts are untouched
+    assert a.completed == 1 and b.completed == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI spec + selection plumbing (no models involved)
+# ---------------------------------------------------------------------------
+
+def test_parse_models_spec():
+    assert parse_models_spec("llama3-8b:2,qwen3-1.7b") == \
+        [("llama3-8b", 2), ("qwen3-1.7b", 1)]
+    assert parse_models_spec(" a:1 , b:3 ") == [("a", 1), ("b", 3)]
+    for bad, msg in (("", "empty"), ("a,,b", "empty entry"),
+                     (":2", "missing model name"), ("a:x", "bad replica"),
+                     ("a:0", ">= 1"), ("a,a", "twice")):
+        with pytest.raises(ValueError, match=msg):
+            parse_models_spec(bad)
+
+
+def test_resolve_arch_aliases():
+    assert resolve_arch("llama3-8b") == "llama3-8b"
+    assert resolve_arch("llama3_8b") == "llama3-8b"
+    assert resolve_arch("qwen3_1_7b") == "qwen3-1.7b"
+    with pytest.raises(KeyError, match="unknown model"):
+        resolve_arch("gpt5")
+
+
+def test_make_selection():
+    assert isinstance(_make_selection("least-loaded"), LeastLoaded)
+    assert isinstance(_make_selection("round-robin"), RoundRobin)
+    with pytest.raises(ValueError, match="unknown replica selection"):
+        _make_selection("random")
+    with pytest.raises(TypeError, match="no select"):
+        _make_selection(42)
+    sentinel = RoundRobin()
+    assert _make_selection(sentinel) is sentinel
+
+
+def test_fleet_constructor_validation(qwen):
+    cfg, params = qwen
+    fm = FleetModel("m", cfg, params)
+    with pytest.raises(ValueError, match="at least one model"):
+        ModelFleet([], total_pages=16, **KW)
+    with pytest.raises(ValueError, match="duplicate model names"):
+        ModelFleet([fm, FleetModel("m", cfg, params)], total_pages=32, **KW)
+    with pytest.raises(ValueError, match="replicas must be"):
+        ModelFleet([FleetModel("m", cfg, params, replicas=0)],
+                   total_pages=16, **KW)
+    with pytest.raises(ValueError, match="cannot hold"):
+        ModelFleet([FleetModel("m", cfg, params, floor=N_TABLES - 1)],
+                   total_pages=16, **KW)
+    with pytest.raises(ValueError, match="floors need"):
+        ModelFleet([FleetModel("m", cfg, params, replicas=2)],
+                   total_pages=2 * N_TABLES - 1, **KW)
+
+
+# ---------------------------------------------------------------------------
+# Routing: selection policies + session affinity
+# ---------------------------------------------------------------------------
+
+def test_round_robin_rotation(qwen):
+    cfg, params = qwen
+    fleet = ModelFleet([FleetModel("q", cfg, params, replicas=2)],
+                       total_pages=4 * N_TABLES, selection="round-robin",
+                       **KW)
+    rids = [fleet.submit(model="q", prompt=prompt_for(cfg, i),
+                         max_new_tokens=2) for i in range(4)]
+    assert [fleet.route(r) for r in rids] == \
+        [("q", 0), ("q", 1), ("q", 0), ("q", 1)]
+    fleet.run()
+
+
+def test_least_loaded_spreads_and_unknown_model_raises(qwen):
+    cfg, params = qwen
+    fleet = ModelFleet([FleetModel("q", cfg, params, replicas=2)],
+                       total_pages=4 * N_TABLES, **KW)
+    # without stepping, queued work counts as load -> submissions spread
+    r0 = fleet.submit(model="q", prompt=prompt_for(cfg, 0),
+                      max_new_tokens=2)
+    r1 = fleet.submit(model="q", prompt=prompt_for(cfg, 1),
+                      max_new_tokens=2)
+    assert {fleet.route(r0)[1], fleet.route(r1)[1]} == {0, 1}
+    with pytest.raises(ValueError, match="unknown model 'x'"):
+        fleet.submit(model="x", prompt=prompt_for(cfg, 0))
+    with pytest.raises(ValueError, match="unknown model"):
+        fleet.home_replica("x", "s")
+    fleet.run()
+
+
+def test_session_affinity_and_home_replica_prefix_hits(qwen):
+    """Turn 2 of a session must land on the replica that served turn 1
+    and hit that replica's prefix cache (the multi-turn prefix is only
+    warm there)."""
+    cfg, params = qwen
+    fleet = ModelFleet([FleetModel("q", cfg, params, replicas=2)],
+                       total_pages=6 * N_TABLES, **KW)
+    # two sessions -> least-loaded spreads them across both replicas
+    t1 = {}
+    for s in range(2):
+        prompt = prompt_for(cfg, s, n=6)    # > page_size: full page cached
+        t1[s] = (fleet.submit(model="q", prompt=prompt, max_new_tokens=3,
+                              session_id=f"s{s}"), prompt)
+    done = fleet.run()
+    homes = {s: fleet.home_replica("q", f"s{s}") for s in range(2)}
+    assert set(homes.values()) == {0, 1}
+    for s in range(2):
+        rid1, prompt = t1[s]
+        follow = np.concatenate(
+            [prompt, np.asarray(done[rid1].generated, np.int32),
+             prompt_for(cfg, 9 + s, n=2)])
+        rid2 = fleet.submit(model="q", prompt=follow, max_new_tokens=2,
+                            session_id=f"s{s}")
+        assert fleet.route(rid2) == ("q", homes[s])   # affinity held
+    done = fleet.run()
+    for s in range(2):
+        home = fleet.group("q").engines[homes[s]]
+        hits = [r for (_, k, r) in home.trace if k == "prefix_hit"]
+        assert hits, f"session s{s}: no prefix hit on its home replica"
+        assert home.metrics.cached_prompt_tokens > 0
+    m = fleet.metrics_snapshot()
+    assert m["models"]["q"]["prefix_hit_rate"] > 0
+
+
+# ---------------------------------------------------------------------------
+# rid namespacing: sampler isolation, replay stability, routing invariance
+# ---------------------------------------------------------------------------
+
+STOCH = SamplingParams(temperature=0.9, seed=11)
+
+
+def _solo_outputs(cfg, params, submits):
+    """Run [(rid, prompt, gen)] on one dedicated engine with explicit
+    rids; returns rid -> generated."""
+    eng = PagedServingEngine(cfg, params, num_pages=65, **KW)
+    for rid, p, g in submits:
+        eng.submit(p, max_new_tokens=g, sampling=STOCH, rid=rid)
+    eng.run()
+    return {r.rid: r.generated for r in eng.finished}
+
+
+def test_raw_rid_collision_vs_fleet_namespacing(qwen):
+    """Two same-seed engines with overlapping raw rids emit the SAME
+    stochastic stream for the same prompt — the collision.  Routed
+    through a fleet, the same two submissions get distinct fleet-global
+    rids: independent streams, yet each replays bit-identically on a
+    solo engine given its fleet rid."""
+    cfg, params = qwen
+    p = prompt_for(cfg, 0)
+    # the collision: dedicated engines both auto-assign rid 0
+    a = PagedServingEngine(cfg, params, num_pages=17, **KW)
+    b = PagedServingEngine(cfg, params, num_pages=17, **KW)
+    a.submit(p, max_new_tokens=5, sampling=STOCH)
+    b.submit(p, max_new_tokens=5, sampling=STOCH)
+    a.run(), b.run()
+    assert a.finished[0].rid == b.finished[0].rid == 0
+    assert a.finished[0].generated == b.finished[0].generated
+
+    def fleet_outputs():
+        fleet = ModelFleet([FleetModel("q", cfg, params, replicas=2)],
+                           total_pages=4 * N_TABLES,
+                           selection="round-robin", **KW)
+        r0 = fleet.submit(model="q", prompt=p, max_new_tokens=5,
+                          sampling=STOCH)
+        r1 = fleet.submit(model="q", prompt=p, max_new_tokens=5,
+                          sampling=STOCH)
+        done = fleet.run()
+        assert {fleet.route(r0)[1], fleet.route(r1)[1]} == {0, 1}
+        return r0, r1, done
+
+    r0, r1, done = fleet_outputs()
+    assert (r0, r1) == (0, 1)               # fleet-global, never colliding
+    assert done[r0].generated != done[r1].generated   # independent streams
+    # replay-stable: a fresh fleet reproduces both streams exactly
+    _, _, again = fleet_outputs()
+    assert {r: q.generated for r, q in again.items()} == \
+        {r: q.generated for r, q in done.items()}
+    # and each stream is bit-identical on a dedicated solo engine
+    solo = _solo_outputs(cfg, params, [(0, p, 5), (1, p, 5)])
+    assert solo == {r: q.generated for r, q in done.items()}
+
+
+class SeededSelection:
+    """Deterministic 'random' replica selection for the fuzz test."""
+
+    def __init__(self, seed):
+        self.rng = np.random.default_rng(seed)
+
+    def select(self, group):
+        return int(self.rng.integers(0, len(group.engines)))
+
+
+def test_fuzz_random_routing_token_identical_to_solo(qwen, llama):
+    """Any routing schedule yields the same per-rid stochastic streams
+    as dedicated solo engines fed the same (rid, prompt) pairs: routing
+    decides where a request runs, never which tokens it produces."""
+    cfg_q, params_q = qwen
+    cfg_l, params_l = llama
+    rng = np.random.default_rng(3)
+    stream = []                             # (model, prompt, gen)
+    for i in range(8):
+        model = "q" if rng.random() < 0.7 else "l"
+        cfg = cfg_q if model == "q" else cfg_l
+        stream.append((model,
+                       prompt_for(cfg, i, n=int(rng.integers(3, 9))),
+                       int(rng.integers(2, 6))))
+
+    per_schedule = []
+    for schedule_seed in (0, 1):
+        fleet = ModelFleet(
+            [FleetModel("q", cfg_q, params_q, replicas=2),
+             FleetModel("l", cfg_l, params_l)],
+            total_pages=6 * N_TABLES,
+            selection=SeededSelection(schedule_seed), **KW)
+        rids = [fleet.submit(model=m, prompt=p, max_new_tokens=g,
+                             sampling=STOCH) for m, p, g in stream]
+        done = fleet.run()
+        per_schedule.append({r: done[r].generated for r in rids})
+    # different schedules, identical streams
+    assert per_schedule[0] == per_schedule[1]
+    # and identical to dedicated solo engines with the same rids
+    solo = {}
+    for model, cfg, params in (("q", cfg_q, params_q),
+                               ("l", cfg_l, params_l)):
+        submits = [(rid, p, g) for rid, (m, p, g)
+                   in zip(range(len(stream)), stream) if m == model]
+        solo.update(_solo_outputs(cfg, params, submits))
+    assert per_schedule[0] == solo
+
+
+def test_explicit_rid_must_stay_monotonic(qwen):
+    cfg, params = qwen
+    eng = PagedServingEngine(cfg, params, num_pages=17, **KW)
+    assert eng.submit(prompt_for(cfg, 0), max_new_tokens=2, rid=5) == 5
+    with pytest.raises(ValueError, match="not monotonic"):
+        eng.submit(prompt_for(cfg, 1), max_new_tokens=2, rid=3)
+    assert eng.submit(prompt_for(cfg, 1), max_new_tokens=2) == 6
+    eng.run()
+
+
+# ---------------------------------------------------------------------------
+# Shared budget at fleet level + observability
+# ---------------------------------------------------------------------------
+
+def test_surplus_borrowing_vs_static_split(qwen, llama):
+    """With minimal floors the busy model's engine climbs past its
+    floor into the surplus; a zero-surplus static split pins it at the
+    floor — same total budget, same tokens either way."""
+    cfg_q, params_q = qwen
+    cfg_l, params_l = llama
+    total = 4 * N_TABLES                    # 16 pages
+    reqs = [(prompt_for(cfg_q, i), 8) for i in range(5)]
+
+    def run(floors):
+        fleet = ModelFleet(
+            [FleetModel("q", cfg_q, params_q, floor=floors[0]),
+             FleetModel("l", cfg_l, params_l, floor=floors[1])],
+            total_pages=total, **KW)
+        for p, g in reqs:                   # all load on one model
+            fleet.submit(model="q", prompt=p, max_new_tokens=g)
+        done = fleet.run()
+        eng = fleet.group("q").engines[0]
+        return eng.metrics.peak_pages_in_use, \
+            {r: q.generated for r, q in done.items()}
+
+    shared_peak, shared_out = run((N_TABLES, N_TABLES))
+    static_peak, static_out = run((total // 2, total // 2))
+    assert shared_peak > N_TABLES           # borrowed surplus
+    assert static_peak <= total // 2        # capped at the static floor
+    assert shared_out == static_out         # budget never changes tokens
+
+
+def test_fleet_metrics_snapshot_and_budget_block(qwen, llama):
+    cfg_q, params_q = qwen
+    cfg_l, params_l = llama
+    fleet = ModelFleet([FleetModel("q", cfg_q, params_q, replicas=2),
+                        FleetModel("l", cfg_l, params_l)],
+                       total_pages=6 * N_TABLES, **KW)
+    for i in range(4):
+        fleet.submit(model=("q" if i % 2 else "l"),
+                     prompt=prompt_for(cfg_q if i % 2 else cfg_l, i),
+                     max_new_tokens=3)
+    fleet.run()
+    m = fleet.metrics_snapshot()
+    assert set(m["models"]) == {"q", "l"}
+    assert m["fleet"]["completed"] == 4
+    assert m["models"]["q"]["completed"] + m["models"]["l"]["completed"] == 4
+    assert len(m["models"]["q"]["replicas"]) == 2
+    assert m["budget"]["total_pages"] == 6 * N_TABLES
+    assert set(m["budget"]["engines"]) == \
+        {"('q', 0)", "('q', 1)", "('l', 0)"}
+    assert m["fleet"]["tokens_per_s"] > 0
+
+
+def test_fleet_stall_names_model_and_replica(qwen):
+    cfg, params = qwen
+    fleet = ModelFleet([FleetModel("q", cfg, params)],
+                       total_pages=2 * N_TABLES, **KW)
+    fleet.submit(model="q", prompt=prompt_for(cfg, 0), max_new_tokens=4)
+    with pytest.raises(SchedulerStallError, match=r"q/0:0\(standard\)"):
+        fleet.run(max_ticks=1)
+    fleet.run()                             # and it can still finish
+    assert fleet.finished()[0].done
