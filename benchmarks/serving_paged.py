@@ -55,6 +55,15 @@ budget policy never change tokens).  Note the budget governs *live*
 pages: each shared-mode engine's physical pool is sized to absorb the
 whole surplus (see docs/serving.md).
 
+Workload 6 (fused-tick scaling): B equal-length prompts decode
+concurrently through the fused one-dispatch tick at several seat
+counts (prefix cache off, per-engine jit warmup excluded).  Because the
+tick is one jitted call — device-resident state, batched on-device
+sampling, one token vector back per tick — per-token cost must FALL as
+seats grow; ``flat_cost_ratio`` (per-token cost at max seats / at 1
+seat) is gated in CI, and the max-seat run must be token-identical to
+the pre-fusion ``fused=False`` engine.
+
 Prints ``name,tokens_per_s,detail`` CSV rows plus ratio lines, and
 writes tokens/s, TTFT, page utilization and prefix-hit rate for every
 engine run to ``--json-out`` (default BENCH_serving.json).  Run:
@@ -671,6 +680,100 @@ def bench_fleet(cfg, params, args):
             "token_identical": True}
 
 
+def bench_tick_scaling(cfg, params, args):
+    """Fused-tick scaling: tokens/s and per-token cost vs active-seat
+    count (workload 6).
+
+    Each configuration seats ``B`` equal-length single-page prompts
+    concurrently (prefix cache off — no sharing, every seat does full
+    work) and decodes ``--tick-gen`` tokens per request, so the steady
+    state is ``B`` active seats stepping through the fused one-dispatch
+    tick.  Because the tick is ONE jitted call whose cost is dominated
+    by dispatch + the batched model step — not by per-seat host work —
+    per-token cost must FALL as seats grow (B tokens per tick for near
+    the price of one): ``flat_cost_ratio`` = per-token cost at max
+    seats / at 1 seat, gated ≤ ``--tick-gate`` in CI.  Per-engine jit
+    warmup is excluded (each seat count traces its own
+    ``(max_seats,)``-shaped fused fn) and the median of
+    ``--tick-reps`` interleaved reps is scored.  The max-seat
+    configuration also runs once with ``fused=False`` (the pre-fusion
+    per-tick engine) and outputs must be token-identical per rid."""
+    ps = args.page_size
+    gen = args.tick_gen
+    seat_counts = sorted(args.tick_seats)
+    max_b = seat_counts[-1]
+    max_seq = ps + gen
+    n_tables = -(-max_seq // ps)
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, 250, ps).astype(np.int32)
+               for _ in range(max_b)]
+    print(f"# workload6: seat counts {seat_counts}, {gen} tokens per "
+          f"request, prompts of {ps} tokens, median of {args.tick_reps} "
+          f"interleaved reps")
+
+    def one_rep(B, fused=True):
+        eng = PagedServingEngine(
+            cfg, params, page_size=ps, num_pages=1 + (B + 1) * n_tables,
+            max_seats=B, max_seq_len=max_seq, prefill_chunk=ps,
+            prefix_cache=False, fused=fused)
+        wp = np.full(ps, 251, np.int32)
+        for _ in range(2):                  # jit warmup: prefill chunk +
+            eng.submit(wp, max_new_tokens=2)  # (fused) decode tick
+            eng.run()
+        n_warm = len(eng.finished)
+        warm_m = eng.metrics.snapshot()
+        for p in prompts[:B]:
+            eng.submit(p, max_new_tokens=gen)
+        t0 = time.perf_counter()
+        eng.run()
+        wall = time.perf_counter() - t0
+        done = eng.finished[n_warm:]
+        toks = sum(len(r.generated) for r in done)
+        ticks = eng.metrics.snapshot()["ticks"] - warm_m["ticks"]
+        rec = {"seats": B, "tokens": toks, "wall_s": wall,
+               "ticks": ticks,
+               "tokens_per_s": toks / max(wall, 1e-9),
+               "per_token_cost_s": wall / max(toks, 1),
+               "per_tick_cost_s": wall / max(ticks, 1)}
+        outs = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+        return rec, outs
+
+    reps = {B: [] for B in seat_counts}
+    for _ in range(args.tick_reps):         # interleave: CPU noise hits
+        for B in seat_counts:               # every seat count equally
+            reps[B].append(one_rep(B))
+    per_seat, outputs = [], {}
+    for B in seat_counts:
+        runs = sorted(reps[B], key=lambda ro: ro[0]["per_token_cost_s"])
+        rec, outs = runs[len(runs) // 2]                 # median rep
+        rec["per_token_cost_reps_s"] = [r[0]["per_token_cost_s"]
+                                        for r in reps[B]]
+        assert all(o == outs for _, o in reps[B]), \
+            f"nondeterministic outputs at {B} seats"
+        per_seat.append(rec)
+        outputs[B] = outs
+        print(f"fused_tick[{B}seats],{rec['tokens_per_s']:.2f},"
+              f"tokens={rec['tokens']};wall_s={rec['wall_s']:.3f};"
+              f"per_token_cost_ms={rec['per_token_cost_s'] * 1e3:.2f};"
+              f"per_tick_cost_ms={rec['per_tick_cost_s'] * 1e3:.2f}")
+
+    # the pre-fusion engine is the token oracle at the largest batch
+    _, oracle = one_rep(max_b, fused=False)
+    token_identical = outputs[max_b] == oracle
+    assert token_identical, \
+        "fused tick changed the generated tokens vs the per-tick engine"
+    ratio = per_seat[-1]["per_token_cost_s"] / \
+        max(per_seat[0]["per_token_cost_s"], 1e-9)
+    print(f"ratio,{ratio:.3f},per_token_cost_{max_b}seats_vs_1seat")
+    assert ratio <= args.tick_gate, \
+        (f"per-token cost at {max_b} seats is {ratio:.2f}x the 1-seat "
+         f"cost (gate {args.tick_gate}): the tick is serializing "
+         "per-seat work instead of batching it")
+    return {"seat_counts": seat_counts, "per_seat": per_seat,
+            "flat_cost_ratio": ratio, "gate": args.tick_gate,
+            "token_identical": token_identical}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -723,6 +826,19 @@ def main():
     ap.add_argument("--fleet-reps", type=int, default=3,
                     help="interleaved repetitions per budget split; the "
                          "median aggregate tokens/s is scored")
+    ap.add_argument("--tick-seats", type=lambda s: [int(x) for x in
+                                                    s.split(",")],
+                    default=[1, 2, 4, 8],
+                    help="comma-separated active-seat counts for the "
+                         "fused-tick scaling bench (workload 6)")
+    ap.add_argument("--tick-gen", type=int, default=24,
+                    help="decode tokens per request (workload 6)")
+    ap.add_argument("--tick-reps", type=int, default=3,
+                    help="interleaved repetitions per seat count; the "
+                         "median per-token cost is scored")
+    ap.add_argument("--tick-gate", type=float, default=0.9,
+                    help="max allowed flat_cost_ratio: per-token cost at "
+                         "max seats / at 1 seat (workload 6 CI gate)")
     ap.add_argument("--json-out", default="BENCH_serving.json")
     args = ap.parse_args()
 
@@ -735,12 +851,14 @@ def main():
     lazy = bench_lazy_growth(cfg, params, args)
     slo = bench_slo_classes(cfg, params, args)
     fleet = bench_fleet(cfg, params, args)
+    tick = bench_tick_scaling(cfg, params, args)
 
     out = {"arch": args.arch, "seed": args.seed,
            "budget_tokens": args.budget_tokens,
            "page_size": args.page_size,
            "skewed": skewed, "shared_prefix": shared,
-           "lazy_growth": lazy, "slo_classes": slo, "fleet": fleet}
+           "lazy_growth": lazy, "slo_classes": slo, "fleet": fleet,
+           "tick_scaling": tick}
     with open(args.json_out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"# wrote {args.json_out}")

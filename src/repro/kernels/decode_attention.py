@@ -63,10 +63,22 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 def decode_attention_pallas(q, k, v, lengths, *, bk: int = 256,
                             interpret: bool = False):
     """q: (BH, d); k/v: (BH, T, d); lengths: (BH,) valid-key counts.
-    Returns (BH, d) in q.dtype."""
+    Returns (BH, d) in q.dtype.
+
+    ``bk`` is clamped to the cache length and the cache is zero-padded
+    up to the next tile multiple (padded keys sit beyond every row's
+    ``lengths`` so the in-kernel mask drops them), so any ``T`` works —
+    e.g. the fixed-slot engine's ``max_len + 1`` scratch layouts and
+    odd ``max_len`` configs that are not multiples of the tile."""
     bh, d = q.shape
     _, t, _ = k.shape
-    assert t % bk == 0, (t, bk)
+    bk = min(bk, t)
+    pad = (-t) % bk
+    if pad:
+        widths = [(0, 0), (0, pad), (0, 0)]
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+        t += pad
     k_steps = t // bk
     scale = d ** -0.5
 

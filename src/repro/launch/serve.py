@@ -19,6 +19,11 @@ several models — ``--models name[:replicas],...`` — served from one
 process under one shared ``--total-pages`` host budget, with fleet-wide
 metrics per model (see docs/serving.md §"Multi-model fleet").
 
+``--tuning-preset alloc|full`` applies the host allocator / XLA
+environment preset (tcmalloc ``LD_PRELOAD``, step-marker and
+host-device-count ``XLA_FLAGS``) by re-exec'ing the interpreter once —
+see :func:`build_tuning_env`.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
       --batch 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --engine paged \
@@ -29,8 +34,10 @@ metrics per model (see docs/serving.md §"Multi-model fleet").
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +51,77 @@ from repro.parallel.sharding import rules_for_mesh, DEFAULT_RULES
 from repro.runtime.router import FleetModel, ModelFleet, parse_models_spec
 from repro.runtime.sampler import Sampler, SamplingParams
 from repro.runtime.serving import PagedServingEngine
+
+
+# ---------------------------------------------------------------------------
+# Allocator / XLA tuning presets
+# ---------------------------------------------------------------------------
+#
+# The serving hot loop allocates host memory every tick (token vectors,
+# metrics); the default glibc malloc serializes those on a global lock and
+# XLA's default step-marker placement re-marks every dispatch.  The presets
+# below bake the standard JAX-serving environment (tcmalloc preload, large-
+# alloc report silencing, step marker on the outer loop, explicit host
+# device count) into the launcher: LD_PRELOAD and XLA_FLAGS are read at
+# process / backend init, so applying a preset re-execs the interpreter
+# once with the adjusted environment.
+
+TCMALLOC_PATH = "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4"
+_TUNED_MARKER = "_REPRO_TUNED"          # guards against re-exec loops
+_XLA_PRESET_FLAGS = ("--xla_step_marker_location=STEP_MARK_AT_TOP_LEVEL_WHILE_LOOP",
+                     "--xla_force_host_platform_device_count=1")
+
+
+def build_tuning_env(preset: str, env: Dict[str, str], *,
+                     tcmalloc_path: str = TCMALLOC_PATH) -> Dict[str, str]:
+    """Environment additions for a ``--tuning-preset`` (pure — no exec).
+
+    ``off`` returns {}.  ``alloc`` preloads tcmalloc (skipped with no
+    effect when the library is absent) and silences its large-allocation
+    reports.  ``full`` adds the XLA flags on top: step marker on the
+    outer while loop and a pinned host platform device count.  Existing
+    ``LD_PRELOAD`` entries and ``XLA_FLAGS`` are appended to, never
+    clobbered, and already-present values are left alone (idempotent)."""
+    if preset == "off":
+        return {}
+    if preset not in ("alloc", "full"):
+        raise ValueError(f"unknown tuning preset {preset!r}; "
+                         "expected off/alloc/full")
+    add: Dict[str, str] = {}
+    if os.path.exists(tcmalloc_path):
+        prior = env.get("LD_PRELOAD", "")
+        if tcmalloc_path not in prior.split(":"):
+            add["LD_PRELOAD"] = ":".join(
+                p for p in (prior, tcmalloc_path) if p)
+        if "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD" not in env:
+            add["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] = "60000000000"
+    if preset == "full":
+        flags = env.get("XLA_FLAGS", "")
+        for flag in _XLA_PRESET_FLAGS:
+            if flag.split("=")[0] not in flags:
+                flags = " ".join(f for f in (flags, flag) if f)
+        if flags != env.get("XLA_FLAGS", ""):
+            add["XLA_FLAGS"] = flags
+    return add
+
+
+def apply_tuning_preset(preset: str) -> None:
+    """Re-exec the interpreter with the preset environment applied.
+
+    Must run before the first jax dispatch: ``LD_PRELOAD`` is consumed
+    by the dynamic loader at process start and ``XLA_FLAGS`` at backend
+    init, so neither can be changed in-process.  No-op (returns) when
+    the preset is ``off``, the environment is already tuned (the
+    ``_REPRO_TUNED`` marker — set on exec — breaks the exec loop), or
+    the preset adds nothing."""
+    if preset == "off" or os.environ.get(_TUNED_MARKER):
+        return
+    add = build_tuning_env(preset, dict(os.environ))
+    env = {**os.environ, **add, _TUNED_MARKER: "1"}
+    if not add:                          # nothing to change; just mark
+        os.environ[_TUNED_MARKER] = "1"
+        return
+    os.execve(sys.executable, [sys.executable] + sys.argv, env)
 
 
 def serve(arch: str, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
@@ -343,9 +421,15 @@ def main():
     ap.add_argument("--watermark", type=float, default=0.05,
                     help="lazy admission gate: free-page headroom kept at "
                          "admission, as a fraction of pool capacity")
+    ap.add_argument("--tuning-preset", choices=("off", "alloc", "full"),
+                    default="off",
+                    help="host allocator / XLA environment preset: alloc "
+                         "preloads tcmalloc; full adds XLA step-marker + "
+                         "host-device-count flags (re-execs once to apply)")
     add_sampling_args(ap)
     add_slo_args(ap)
     args = ap.parse_args()
+    apply_tuning_preset(args.tuning_preset)
     sampling = sampling_from_args(args)
     if args.fleet:
         try:

@@ -23,6 +23,7 @@ from repro.models.modules import (ParamSpec, is_spec, rms_norm, swiglu,
                                   mlp_specs, softmax_xent_chunked,
                                   init_params, abstract_params, axes_tree)
 from repro.parallel.sharding import LogicalRules, spec_for
+from repro.runtime import sampler as sampler_mod
 
 init_params = init_params          # re-export
 abstract_params = abstract_params  # re-export
@@ -435,6 +436,46 @@ def paged_decode_step(params, cfg: ModelConfig, cache, tokens, pos,
     logits = jnp.einsum("bsd,dv->bsv", x,
                         _output_weight(params, cfg).astype(x.dtype))
     return logits.astype(jnp.float32), new_cache
+
+
+def fused_decode_tick(params, cfg: ModelConfig, cache, last_tok, pos,
+                      page_table, n_valid, temperature, top_k, top_p,
+                      seed, rid, step, rules: LogicalRules,
+                      opts: RunOptions = RunOptions()):
+    """One whole serving decode tick as a single device dispatch.
+
+    Runs the batched paged model step AND batched sampling (greedy
+    argmax / temperature / top-k / top-p via
+    ``runtime.sampler.sample_tokens``, keyed per ``(seed, rid, step)``)
+    on device, then advances every active seat's position, sampler step
+    and last-token slot functionally — so the serving state lives on
+    the device between ticks and exactly one ``(A,)`` int32 token
+    vector crosses to the host per tick.  Idle seats (``n_valid == 0``)
+    ride through with their state unchanged.
+
+    last_tok: (A,) int32 — each seat's previously emitted token (the
+    tick's model input);
+    pos: (A,) int32 next write position per seat;
+    page_table: (A, n) int32 logical->physical page map;
+    n_valid: (A,) int32 — 1 for seats decoding this tick, else 0;
+    temperature/top_p: (A,) float32, top_k: (A,) int32,
+    seed/rid/step: (A,) uint32 — per-seat sampling state.
+
+    Returns ``(tokens, new_cache, new_pos, new_step, page_table)``:
+    ``tokens`` is both the tick's emission and the next tick's
+    ``last_tok`` (inactive seats keep their previous token), and
+    ``page_table`` is returned untouched so callers can donate it.
+    """
+    logits, new_cache = paged_decode_step(
+        params, cfg, cache, last_tok[:, None], pos, page_table, n_valid,
+        rules, opts)
+    toks = sampler_mod.sample_tokens(logits[:, 0], temperature, top_k,
+                                     top_p, seed, rid, step)
+    active = n_valid > 0
+    toks = jnp.where(active, toks, last_tok)
+    new_pos = pos + n_valid
+    new_step = step + n_valid.astype(step.dtype)
+    return toks, new_cache, new_pos, new_step, page_table
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos,

@@ -1,13 +1,13 @@
 """Shared token sampler: temperature / top-k / top-p with per-request seeds.
 
 Both serving engines (every ``runtime.serving.Scheduler``) draw tokens
-through one :class:`Sampler`, so fixed-slot and paged decode share a
-single sampling implementation instead of each engine hard-coding
-argmax.  ``temperature <= 0`` (the default) is exact greedy argmax — the
-path the engine-equivalence tests pin to the pre-refactor outputs.
+through one sampling algorithm, so fixed-slot and paged decode share a
+single implementation instead of each engine hard-coding argmax.
+``temperature <= 0`` (the default) is exact greedy argmax — the path the
+engine-equivalence tests pin to the pre-refactor outputs.
 
-Stochastic sampling is deterministic per ``(seed, rid, step)``: the RNG
-for every drawn token is seeded from the request's
+Stochastic sampling is deterministic per ``(seed, rid, step)``: every
+drawn token derives from a counter-based integer hash of the request's
 :class:`SamplingParams.seed`, its engine-assigned ``rid`` and the token
 index, so a replayed request reproduces its token stream exactly and two
 requests in the same batch never share a stream.
@@ -16,13 +16,39 @@ The key is ``(seed, rid, step)`` and nothing else — deliberately NOT
 the request's SLO priority class, deadline, or the scheduler's
 admission policy: scheduling decides *when* a request runs, never
 *which* tokens it produces (tests/test_slo_scheduling.py pins this).
+
+The algorithm is the Gumbel-max trick over filtered logits, chosen
+because it has TWO interchangeable implementations that draw identical
+tokens:
+
+- :meth:`Sampler.sample` — the numpy host oracle (one row at a time),
+  used by the fallback per-tick engine paths and as the reference in
+  equivalence tests;
+- :func:`sample_tokens` — the batched jax device path, fused into the
+  serving engine's one-dispatch decode tick
+  (``models.model.fused_decode_tick``) so sampling never forces a
+  per-request device→host sync.
+
+Both compute, in float32: ``x = logits / T``; mask all but the top-k
+logits; mask tokens outside the top-p nucleus (smallest prefix of the
+descending-sorted softmax reaching ``top_p``); add Gumbel noise
+``-log(-log(u))`` where ``u`` is a uniform derived from the
+(seed, rid, step, token) hash; take the argmax.  Every arithmetic step
+is elementwise IEEE float32 (exact in both numpy and XLA), so the two
+paths agree token-for-token.
+
 See docs/serving.md for where the sampler sits in the serving stack.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
+
+#: fmix32 finalizer constants (MurmurHash3) — the per-token counter hash.
+_M1, _M2, _GOLD = 0x85EBCA6B, 0xC2B2AE35, 0x9E3779B9
+_MASK32 = 0xFFFFFFFF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,8 +84,119 @@ class SamplingParams:
 GREEDY = SamplingParams()
 
 
+# ---------------------------------------------------------------------------
+# Counter-based uniform/Gumbel noise — twin numpy / jax implementations.
+#
+# All arithmetic is uint32 with wraparound, bit-identical between numpy
+# arrays and XLA, so host and device derive the same noise for the same
+# (seed, rid, step) key.
+# ---------------------------------------------------------------------------
+
+def _mix_np(h: np.ndarray) -> np.ndarray:
+    """fmix32 avalanche over a uint32 ndarray (wraparound multiply)."""
+    h = h ^ (h >> np.uint32(16))
+    h = h * np.uint32(_M1)
+    h = h ^ (h >> np.uint32(13))
+    h = h * np.uint32(_M2)
+    return h ^ (h >> np.uint32(16))
+
+
+def _gumbel_np(seed: int, rid: int, step: int, n: int) -> np.ndarray:
+    """(n,) float32 Gumbel noise keyed by (seed, rid, step)."""
+    k = _mix_np(np.asarray([seed & _MASK32], np.uint32) ^ np.uint32(_GOLD))
+    k = _mix_np(k ^ np.uint32(rid & _MASK32))
+    k = _mix_np(k ^ np.uint32(step & _MASK32))
+    u32 = _mix_np(k ^ np.arange(n, dtype=np.uint32))
+    # 24 mantissa-exact bits, offset off 0 and 1 so both logs are finite
+    u = ((u32 >> np.uint32(8)).astype(np.float32) + np.float32(0.5)) \
+        * np.float32(2.0 ** -24)
+    return (-np.log(-np.log(u))).astype(np.float32)
+
+
+def _mix_jnp(h):
+    """fmix32 avalanche over a uint32 jax array."""
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(_M1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(_M2)
+    return h ^ (h >> 16)
+
+
+def _gumbel_jnp(seed, rid, step, n: int):
+    """(B, n) float32 Gumbel noise; seed/rid/step are (B,) uint32."""
+    k = _mix_jnp(seed ^ jnp.uint32(_GOLD))
+    k = _mix_jnp(k ^ rid)
+    k = _mix_jnp(k ^ step)
+    u32 = _mix_jnp(k[:, None] ^ jnp.arange(n, dtype=jnp.uint32)[None, :])
+    u = ((u32 >> 8).astype(jnp.float32) + jnp.float32(0.5)) \
+        * jnp.float32(2.0 ** -24)
+    return -jnp.log(-jnp.log(u))
+
+
+# ---------------------------------------------------------------------------
+# Device path: batched sampling inside the fused decode tick
+# ---------------------------------------------------------------------------
+
+def sample_tokens(logits, temperature, top_k, top_p, seed, rid, step):
+    """Batched device sampler: one token per row, jit-safe, no host sync.
+
+    The device half of the shared sampling algorithm (see module
+    docstring); ``models.model.fused_decode_tick`` composes it with the
+    paged model step so exactly one token vector leaves the device per
+    tick.  Token-for-token identical to looping :meth:`Sampler.sample`
+    over the rows (the equivalence suite pins this).
+
+    Args:
+      logits: (B, V) unnormalized log-probs (any float dtype; sampled
+          in float32 like the host oracle).
+      temperature: (B,) float32; rows with ``temperature <= 0`` take
+          the plain argmax (greedy) and ignore every other parameter.
+      top_k: (B,) int32 (0 = off).
+      top_p: (B,) float32 (1.0 = off).
+      seed, rid, step: (B,) uint32 — the per-row RNG key.
+
+    Returns:
+      (B,) int32 token ids.
+    """
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    rows = jnp.arange(B)[:, None]
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    t_safe = jnp.where(temperature > 0, temperature, 1.0).astype(jnp.float32)
+    x = logits / t_safe[:, None]
+    # top-k: drop everything below the k-th largest (ties at the
+    # threshold survive, matching the oracle)
+    kth_idx = jnp.clip(top_k, 1, V) - 1
+    kth = jnp.take_along_axis(jnp.sort(x, axis=-1)[:, ::-1],
+                              kth_idx[:, None], axis=-1)
+    apply_k = ((top_k > 0) & (top_k < V))[:, None]
+    x = jnp.where(apply_k & (x < kth), -jnp.inf, x)
+    # top-p: keep the smallest descending-probability prefix reaching
+    # top_p (the top token always survives: its exclusive cumsum is 0)
+    p = jnp.exp(x - jnp.max(x, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    order = jnp.argsort(-p, axis=-1)                    # stable, like numpy
+    p_sorted = jnp.take_along_axis(p, order, axis=-1)
+    keep_sorted = (jnp.cumsum(p_sorted, axis=-1) - p_sorted) < top_p[:, None]
+    in_nucleus = jnp.zeros((B, V), bool).at[rows, order].set(keep_sorted)
+    x = jnp.where((top_p < 1.0)[:, None] & ~in_nucleus, -jnp.inf, x)
+
+    g = _gumbel_jnp(seed, rid, step, V)
+    stoch_tok = jnp.argmax(x + g, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0, stoch_tok, greedy_tok)
+
+
+# ---------------------------------------------------------------------------
+# Host oracle
+# ---------------------------------------------------------------------------
+
 class Sampler:
-    """Stateless sampler; all randomness derives from (seed, rid, step)."""
+    """Stateless sampler; all randomness derives from (seed, rid, step).
+
+    This is the numpy *oracle* for :func:`sample_tokens` — the fallback
+    per-tick engine paths call it directly, and the fused device path is
+    pinned token-identical to it."""
 
     def sample(self, logits, params: SamplingParams = GREEDY, *,
                rid: int = 0, step: int = 0) -> int:
@@ -76,24 +213,21 @@ class Sampler:
           The drawn token id in ``[0, V)``; identical for identical
           ``(logits, params.seed, rid, step)`` regardless of batch
           composition, scheduling order, or the request's SLO class."""
-        logits = np.asarray(logits, np.float64).reshape(-1)
+        x = np.asarray(logits, np.float32).reshape(-1)
         if params is None or params.greedy:
-            return int(np.argmax(logits))
-        x = logits / params.temperature
+            return int(np.argmax(x))
+        x = x / np.float32(params.temperature)
         if 0 < params.top_k < x.size:
-            kth = np.partition(x, -params.top_k)[-params.top_k]
-            x = np.where(x < kth, -np.inf, x)
-        x = x - np.max(x)
-        p = np.exp(x)
-        p /= p.sum()
+            kth = np.sort(x)[::-1][params.top_k - 1]
+            x = np.where(x < kth, -np.inf, x).astype(np.float32)
         if params.top_p < 1.0:
+            p = np.exp(x - np.max(x))
+            p = p / p.sum()
             order = np.argsort(-p, kind="stable")
             csum = np.cumsum(p[order])
             # keep the minimal nucleus; the top token always survives
-            in_nucleus = np.zeros(p.size, bool)
-            in_nucleus[order] = csum - p[order] < params.top_p
-            p = np.where(in_nucleus, p, 0.0)
-            p /= p.sum()
-        rng = np.random.default_rng(
-            np.random.SeedSequence([params.seed, rid, step]))
-        return int(rng.choice(p.size, p=p))
+            keep = np.zeros(p.size, bool)
+            keep[order] = csum - p[order] < np.float32(params.top_p)
+            x = np.where(keep, x, -np.inf).astype(np.float32)
+        g = _gumbel_np(params.seed, rid, step, x.size)
+        return int(np.argmax(x + g))

@@ -404,46 +404,64 @@ class Scheduler:
 
     # -- token bookkeeping ----------------------------------------------------
 
-    def _emit_first_token(self, req: Request, logits_row) -> None:
-        """Sample the TTFT token from the last prompt position's logits."""
-        if req.sampling.greedy:
-            tok = int(jnp.argmax(logits_row))    # device reduce, 1 int out
+    def _emit_first_tokens(self, ready: List[Tuple[Request, object]]) -> None:
+        """Sample the TTFT token for every request whose prefill
+        completed this tick, in ONE batched sampler call with ONE
+        device→host transfer, then timestamp all of them *after* the
+        batch — a burst of K admissions used to serialize K blocking
+        per-request argmax pulls, inflating every later request's
+        recorded TTFT (and its deadline-miss verdict) with its
+        predecessors' sync time.
+
+        ready: ``[(req, logits_row)]`` in emission (rid) order, each
+        row the last prompt position's ``(V,)`` logits."""
+        if not ready:
+            return
+        rows = jnp.stack([row for _, row in ready])
+        if all(req.sampling.greedy for req, _ in ready):
+            # one on-device argmax over the burst; K ints cross to host
+            toks = np.asarray(jnp.argmax(rows, axis=-1), np.int32)
         else:
-            tok = self.sampler.sample(np.asarray(logits_row), req.sampling,
-                                      rid=req.rid, step=0)
-        req.generated.append(tok)
-        req.t_first_token = time.perf_counter()
-        ttft = req.t_first_token - req.t_submit
-        missed = req.deadline_ms is not None and ttft * 1e3 > req.deadline_ms
-        self.metrics.note_first_token(req.priority, ttft,
-                                      deadlined=req.deadline_ms is not None,
-                                      missed=missed)
-        self.trace.append((self._tick, "first_token", req.rid))
-        if missed:
-            self.trace.append((self._tick, "deadline_miss", req.rid))
-        hit_eos = req.eos_id is not None and tok == req.eos_id
-        if req.max_new_tokens <= 1 or hit_eos:
-            self.finish(req)
+            host = np.asarray(rows)              # one (K, V) transfer
+            toks = [self.sampler.sample(host[i], req.sampling,
+                                        rid=req.rid, step=0)
+                    for i, (req, _) in enumerate(ready)]
+        now = time.perf_counter()
+        for (req, _), tok in zip(ready, toks):
+            tok = int(tok)
+            req.generated.append(tok)
+            req.t_first_token = now
+            ttft = now - req.t_submit
+            missed = (req.deadline_ms is not None
+                      and ttft * 1e3 > req.deadline_ms)
+            self.metrics.note_first_token(
+                req.priority, ttft, deadlined=req.deadline_ms is not None,
+                missed=missed)
+            self.trace.append((self._tick, "first_token", req.rid))
+            if missed:
+                self.trace.append((self._tick, "deadline_miss", req.rid))
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if req.max_new_tokens <= 1 or hit_eos:
+                self.finish(req)
 
     def _sample_decode_batch(self, last_logits, seat_ids) -> Dict[int, int]:
-        """Next token per seat from ``(max_seats, V)`` device logits.
-        Greedy seats share one on-device argmax (only ints cross to host);
-        full logits rows are pulled only when a stochastic seat needs
+        """Next token per seat from ``(max_seats, V)`` device logits —
+        the fallback per-tick path (fixed-slot archs and ``fused=False``
+        paged engines; the fused paged path samples on device inside
+        ``fused_decode_tick`` instead).  Only the *active* seats' rows
+        are gathered — idle seats' logits are never reduced or
+        transferred: greedy-only batches move K ints to the host, and
+        the (K, V) active rows cross only when a stochastic seat needs
         them."""
-        greedy = np.asarray(jnp.argmax(last_logits, axis=-1), np.int32)
-        rows = None
-        toks: Dict[int, int] = {}
-        for s in seat_ids:
-            req = self.seats[s]
-            if req.sampling.greedy:
-                toks[s] = int(greedy[s])
-            else:
-                if rows is None:
-                    rows = np.asarray(last_logits)
-                toks[s] = self.sampler.sample(rows[s], req.sampling,
-                                              rid=req.rid,
-                                              step=len(req.generated))
-        return toks
+        sel = last_logits[jnp.asarray(seat_ids, jnp.int32)]
+        if all(self.seats[s].sampling.greedy for s in seat_ids):
+            toks = np.asarray(jnp.argmax(sel, axis=-1), np.int32)
+            return {s: int(toks[i]) for i, s in enumerate(seat_ids)}
+        rows = np.asarray(sel)                   # active rows only
+        return {s: self.sampler.sample(rows[i], self.seats[s].sampling,
+                                       rid=self.seats[s].rid,
+                                       step=len(self.seats[s].generated))
+                for i, s in enumerate(seat_ids)}
 
     def _emit_decode_token(self, req: Request, tok: int) -> None:
         req.generated.append(tok)
@@ -663,14 +681,20 @@ class FixedSlotPolicy:
     def prefill_tick(self) -> None:
         """Whole-prompt prefill for every seat admitted this tick, in rid
         order (so the newly admitted request decodes in the same tick —
-        the pre-refactor fixed-slot cadence)."""
+        the pre-refactor fixed-slot cadence).  First tokens for the whole
+        admission burst are sampled in ONE batched call after all the
+        prefills dispatch, not one blocking sync per request."""
         pending = sorted((r for r in self.sched.seats.values()
                           if r.prefill_pos < len(r.prefill_src)),
                          key=lambda r: r.rid)
+        ready = []
         for req in pending:
-            self._prefill_one(req)
+            row = self._prefill_one(req)
+            if row is not None:
+                ready.append((req, row))
+        self.sched._emit_first_tokens(ready)
 
-    def _prefill_one(self, req: Request) -> None:
+    def _prefill_one(self, req: Request):
         slot = req.slot
         src = req.prefill_src
         P = len(src)
@@ -701,9 +725,10 @@ class FixedSlotPolicy:
         req.prefill_pos = P
         self.sched.metrics.prefill_tokens += P
         if req.resume_tokens is None:
-            self.sched._emit_first_token(req, logits[0, -1])
-        # else: replay after a preemption — the TTFT token was already
-        # emitted; decode resumes by feeding generated[-1]
+            return logits[0, -1]         # first token sampled in the batch
+        # replay after a preemption — the TTFT token was already emitted;
+        # decode resumes by feeding generated[-1]
+        return None
 
     def decode_tick(self) -> None:
         """One token for every active slot (prefill completes in the
@@ -740,7 +765,7 @@ class PagedPolicy:
                  max_seats: int, max_seq_len: int, prefill_chunk: int,
                  rules: LogicalRules, opts: Optional[M.RunOptions],
                  prefix_cache: bool = True, lazy_pages: bool = True,
-                 watermark: float = 0.05):
+                 watermark: float = 0.05, fused: bool = True):
         if not M.paged_cache_supported(cfg):
             raise ValueError(
                 f"{cfg.name}: paged KV needs a pure-attention decoder; "
@@ -786,6 +811,29 @@ class PagedPolicy:
         # CPU and would only warn there)
         donate = (0,) if jax.default_backend() != "cpu" else ()
         self._cow_fn = jax.jit(M.copy_paged_page, donate_argnums=donate)
+
+        # fused one-dispatch tick: model step + batched sampling in one
+        # jitted call over device-resident state.  Every argument keeps a
+        # fixed (max_seats,)-based shape so admission/finish/preemption
+        # churn never retraces; cache / last-token / pos / table / step
+        # are donated (functional in-place update) off-CPU.  Arg order:
+        # 0=params 1=cache 2=last 3=pos 4=table 5=nv 6=temp 7=top_k
+        # 8=top_p 9=seed 10=rid 11=step; outputs alias 1->cache, 2->toks,
+        # 3->pos, 4->table, 11->step.
+        self.fused = fused
+        fdonate = ((1, 2, 3, 4, 11)
+                   if jax.default_backend() != "cpu" else ())
+        self._fused_fn = jax.jit(
+            lambda p, c, last, q, pt, nv, t, tk, tp, sd, rd, st:
+                M.fused_decode_tick(p, cfg, c, last, q, pt, nv, t, tk, tp,
+                                    sd, rd, st, rules, self.opts),
+            donate_argnums=fdonate)
+        # device mirrors of the serving state, rebuilt only on churn
+        # (self._dirty); between churn events decode ticks run entirely
+        # from the arrays the previous fused tick returned, so the only
+        # per-tick host<->device traffic is the token vector coming back
+        self._dev: Optional[Dict[str, jnp.ndarray]] = None
+        self._dirty = True
 
     def bind(self, sched: Scheduler) -> None:
         """Attach the owning :class:`Scheduler` (called once, by its
@@ -892,6 +940,7 @@ class PagedPolicy:
         row[:len(req.pages)] = req.pages
         self.page_table[seat] = row
         self.pos[seat] = 0
+        self._dirty = True
         return True
 
     def release(self, req: Request) -> None:
@@ -901,6 +950,7 @@ class PagedPolicy:
         self.bm.free(req.pages)
         self.page_table[req.slot] = 0
         self.pos[req.slot] = 0
+        self._dirty = True
 
     def preempt(self, req: Request) -> None:
         """Free the request's placement for replay: refcounts drop
@@ -912,6 +962,7 @@ class PagedPolicy:
         self.bm.free(req.pages)
         self.page_table[req.slot] = 0
         self.pos[req.slot] = 0
+        self._dirty = True
         req.resume_tokens = np.concatenate(
             [req.prompt, np.asarray(req.generated[:-1], np.int32)])
         req.pages = []
@@ -950,8 +1001,9 @@ class PagedPolicy:
         self._register_full_pages(req)
         if req.prefill_pos == len(src):
             self.pos[seat] = len(src)
+            self._dirty = True           # seat joins the decoding set
             if req.resume_tokens is None:
-                self.sched._emit_first_token(req, logits[0, c - 1])
+                self.sched._emit_first_tokens([(req, logits[0, c - 1])])
             # else: replay — TTFT token already emitted before the
             # preemption; decode resumes by feeding generated[-1]
 
@@ -999,30 +1051,94 @@ class PagedPolicy:
             if pg is not None:
                 self.page_table[s, len(req.pages)] = pg
                 req.pages.append(pg)
+                self._dirty = True       # table row changed on host
+
+    def _sync_device(self) -> None:
+        """Rebuild the device-resident tick state from the host mirrors
+        after a churn event (admit / finish / preempt / page growth /
+        prefill completion).  Steady-state decode ticks never call this —
+        they run entirely off the arrays the previous fused tick
+        returned, and the host mirrors (``self.pos``/``self.page_table``,
+        which bookkeeping and tests introspect) stay authoritative for
+        scheduling decisions.  Every array keeps a fixed
+        ``(max_seats,)``-based shape and dtype so the fused jit never
+        retraces."""
+        A = self.max_seats
+        last = np.zeros((A,), np.int32)
+        nv = np.zeros((A,), np.int32)
+        temp = np.zeros((A,), np.float32)
+        top_k = np.zeros((A,), np.int32)
+        top_p = np.ones((A,), np.float32)
+        seed = np.zeros((A,), np.uint32)
+        rid = np.zeros((A,), np.uint32)
+        step = np.zeros((A,), np.uint32)
+        for s, r in self.sched.seats.items():
+            if r.prefill_pos < len(r.prefill_src):
+                continue                 # still prefilling: stays masked
+            nv[s] = 1
+            last[s] = r.generated[-1]
+            sp = r.sampling
+            temp[s] = sp.temperature
+            top_k[s] = sp.top_k
+            top_p[s] = sp.top_p
+            seed[s] = sp.seed & 0xFFFFFFFF
+            rid[s] = r.rid & 0xFFFFFFFF
+            step[s] = len(r.generated)
+        self._dev = {
+            "last": jnp.asarray(last), "pos": jnp.asarray(self.pos),
+            "table": jnp.asarray(self.page_table), "nv": jnp.asarray(nv),
+            "temp": jnp.asarray(temp), "top_k": jnp.asarray(top_k),
+            "top_p": jnp.asarray(top_p), "seed": jnp.asarray(seed),
+            "rid": jnp.asarray(rid), "step": jnp.asarray(step),
+        }
+        self._dirty = False
 
     def decode_tick(self) -> None:
         """One token for every seat whose prefill is complete (growing
-        page tables first in lazy mode)."""
+        page tables first in lazy mode).
+
+        Fused mode (default): ONE jitted dispatch runs the model step
+        and the batched sampler over device-resident state, and the only
+        host<->device traffic for the tick is the ``(max_seats,)`` int32
+        token vector coming back.  ``fused=False`` keeps the pre-fusion
+        per-tick path (host-built token/nv arrays, host-side sampling) —
+        the equivalence oracle the fused path is pinned token-identical
+        to."""
         sched = self.sched
         if self.lazy:
             self._grow_tick()
         decoding = self._decoding_seats()
         if not decoding:
             return
-        tok = np.zeros((self.max_seats, 1), np.int32)
-        nv = np.zeros((self.max_seats,), np.int32)
-        for s in decoding:
-            tok[s, 0] = sched.seats[s].generated[-1]
-            nv[s] = 1
-        logits, self.cache = self._step_fn(
-            self.params, self.cache, jnp.asarray(tok),
-            jnp.asarray(self.pos), jnp.asarray(self.page_table),
-            jnp.asarray(nv))
-        toks = sched._sample_decode_batch(logits[:, 0], decoding)
+        if not self.fused:
+            tok = np.zeros((self.max_seats, 1), np.int32)
+            nv = np.zeros((self.max_seats,), np.int32)
+            for s in decoding:
+                tok[s, 0] = sched.seats[s].generated[-1]
+                nv[s] = 1
+            logits, self.cache = self._step_fn(
+                self.params, self.cache, jnp.asarray(tok),
+                jnp.asarray(self.pos), jnp.asarray(self.page_table),
+                jnp.asarray(nv))
+            toks = sched._sample_decode_batch(logits[:, 0], decoding)
+            for s in decoding:
+                req = sched.seats[s]
+                self.pos[s] += 1
+                sched._emit_decode_token(req, toks[s])
+            return
+        if self._dirty:
+            self._sync_device()
+        d = self._dev
+        toks_dev, self.cache, d["pos"], d["step"], d["table"] = \
+            self._fused_fn(self.params, self.cache, d["last"], d["pos"],
+                           d["table"], d["nv"], d["temp"], d["top_k"],
+                           d["top_p"], d["seed"], d["rid"], d["step"])
+        d["last"] = toks_dev             # this tick's token = next input
+        toks = np.asarray(toks_dev)      # the tick's ONE device->host sync
         for s in decoding:
             req = sched.seats[s]
             self.pos[s] += 1
-            sched._emit_decode_token(req, toks[s])
+            sched._emit_decode_token(req, int(toks[s]))
 
 
 # ---------------------------------------------------------------------------
@@ -1079,6 +1195,12 @@ class PagedServingEngine(Scheduler):
     ``lazy_pages=False`` restores up-front full reservation.
     ``watermark`` is the lazy admission gate's free-page headroom as a
     fraction of pool capacity (≥1 page; waived on an idle pool).
+    ``fused`` (default True) runs each decode tick as ONE jitted
+    dispatch — model step plus batched on-device sampling over
+    device-resident pos/page-table/last-token state — so a single
+    ``(max_seats,)`` token vector is the tick's only host↔device
+    round-trip; ``fused=False`` keeps the pre-fusion per-tick path
+    (the equivalence oracle).
     ``admission`` selects the queue policy (``"fcfs"`` default /
     ``"slo"``) and ``aging_ticks`` its anti-starvation bound — see
     :class:`SLOAdmission` and docs/serving.md."""
@@ -1092,14 +1214,15 @@ class PagedServingEngine(Scheduler):
                  opts: Optional[M.RunOptions] = None,
                  sampler: Optional[Sampler] = None,
                  prefix_cache: bool = True, lazy_pages: bool = True,
-                 watermark: float = 0.05,
+                 watermark: float = 0.05, fused: bool = True,
                  admission="fcfs", aging_ticks: int = 64):
         policy = PagedPolicy(cfg, params, page_size=page_size,
                              num_pages=num_pages, max_seats=max_seats,
                              max_seq_len=max_seq_len,
                              prefill_chunk=prefill_chunk, rules=rules,
                              opts=opts, prefix_cache=prefix_cache,
-                             lazy_pages=lazy_pages, watermark=watermark)
+                             lazy_pages=lazy_pages, watermark=watermark,
+                             fused=fused)
         super().__init__(policy, max_seats=max_seats, sampler=sampler,
                          page_capacity=policy.bm.capacity,
                          admission=admission, aging_ticks=aging_ticks)

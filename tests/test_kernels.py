@@ -135,6 +135,25 @@ def test_decode_attention_sweep(t, h, kvh, d, dtype):
                                np.asarray(want, np.float32), atol=atol)
 
 
+@pytest.mark.parametrize("t", [37, 65, 100, 192, 255])
+def test_decode_attention_odd_lengths(t):
+    """Regression: cache lengths not divisible by the key tile used to
+    hit a hard ``t % bk == 0`` assert (e.g. fixed-slot ``max_len=192``
+    configs, or any ``max_len + 1`` scratch layout).  The kernel now
+    clamps ``bk`` and zero-pads the cache to the tile multiple; padded
+    keys sit beyond every row's length so results are unchanged."""
+    from repro.kernels.decode_attention import decode_attention_pallas
+    key = jax.random.PRNGKey(t)
+    BH, d = 4, 32
+    q = jax.random.normal(key, (BH, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (BH, t, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (BH, t, d), jnp.float32)
+    lengths = jnp.array([t, max(1, t // 2), max(1, t - 1), 1], jnp.int32)
+    out = decode_attention_pallas(q, k, v, lengths, bk=64, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
 def test_decode_attention_matches_model_decode_path():
     """Kernel agrees with the model's decode_attention (cache semantics)."""
     from repro.configs.base import ModelConfig

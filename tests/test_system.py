@@ -67,6 +67,48 @@ def test_serve_greedy_deterministic():
                           np.asarray(r2["generated"]))
 
 
+def test_tuning_preset_env(tmp_path):
+    """build_tuning_env is pure, idempotent, and append-only: tcmalloc
+    joins (never clobbers) LD_PRELOAD, XLA flags join XLA_FLAGS, a
+    missing tcmalloc library degrades to the XLA flags alone, and an
+    already-tuned environment gets no additions."""
+    from repro.launch.serve import build_tuning_env
+    lib = tmp_path / "libtcmalloc.so.4"
+    lib.write_bytes(b"")
+
+    assert build_tuning_env("off", {}) == {}
+    with pytest.raises(ValueError, match="preset"):
+        build_tuning_env("warp-speed", {})
+
+    add = build_tuning_env("alloc", {}, tcmalloc_path=str(lib))
+    assert add["LD_PRELOAD"] == str(lib)
+    assert "XLA_FLAGS" not in add
+
+    add = build_tuning_env("full", {"LD_PRELOAD": "/other.so",
+                                    "XLA_FLAGS": "--xla_foo=2"},
+                           tcmalloc_path=str(lib))
+    assert add["LD_PRELOAD"] == f"/other.so:{lib}"
+    assert "--xla_foo=2" in add["XLA_FLAGS"]
+    assert ("--xla_step_marker_location=STEP_MARK_AT_TOP_LEVEL_WHILE_LOOP"
+            in add["XLA_FLAGS"])
+    assert "--xla_force_host_platform_device_count=1" in add["XLA_FLAGS"]
+
+    # no tcmalloc on disk: alloc adds nothing, full still tunes XLA
+    assert build_tuning_env("alloc", {},
+                            tcmalloc_path=str(tmp_path / "nope.so")) == {}
+    add = build_tuning_env("full", {},
+                           tcmalloc_path=str(tmp_path / "nope.so"))
+    assert set(add) == {"XLA_FLAGS"}
+
+    # idempotent against an environment the preset already shaped
+    tuned = {"LD_PRELOAD": str(lib),
+             "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+             "XLA_FLAGS": ("--xla_step_marker_location="
+                           "STEP_MARK_AT_TOP_LEVEL_WHILE_LOOP "
+                           "--xla_force_host_platform_device_count=1")}
+    assert build_tuning_env("full", tuned, tcmalloc_path=str(lib)) == {}
+
+
 def test_paper_headline_lowprec_claim():
     """Table 9's structural claim in miniature: the FP8/bf16 LU does the
     same O(n³) factor work at lower precision and IR recovers an answer
