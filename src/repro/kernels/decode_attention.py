@@ -195,3 +195,110 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, page_table, lengths, *,
         interpret=interpret,
     )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), q,
       k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Quantized paged decode attention (fp8/int8 pages + per-slot scales)
+# ---------------------------------------------------------------------------
+#
+# Same gather-over-page-table structure, but the pool stores K/V quantized
+# (fp8 e4m3 or int8) with one f32 scale per stored d-vector.  The scale
+# arrays ride the SAME scalar-prefetched page table as the value pages —
+# grid step (b, i) DMAs page ``pt[b, i]``'s values AND its scale row into
+# VMEM together — and the tiles are dequantized to f32 in VMEM before the
+# flash inner loop, so the softmax/accumulate math is identical to the
+# full-precision kernel.
+
+
+def _quantized_paged_decode_kernel(len_ref, pt_ref, q_ref, k_ref, v_ref,
+                                   ks_ref, vs_ref, o_ref, m_ref, l_ref,
+                                   acc_ref, *, scale: float, page: int,
+                                   n_pages: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(i * page < length)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)                  # (1, d)
+        # dequantize in VMEM: values (page, d) * per-slot scales (page, 1)
+        k = k_ref[0].astype(jnp.float32) * ks_ref[0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = i * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)            # (1, page)
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_old - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32) * vs_ref[0][:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantized_paged_decode_attention_pallas(q, k_pages, v_pages, k_scale,
+                                            v_scale, page_table, lengths, *,
+                                            interpret: bool = False):
+    """Decode attention over a quantized paged KV pool.
+
+    q: (BH, d); k_pages/v_pages: (P, page, d) fp8/int8 physical pool;
+    k_scale/v_scale: (P, page) f32 — one scale per stored d-vector,
+    laid out page-for-page with the value pools so the scalar-prefetched
+    page table drives both DMAs; page_table: (BH, n) int32; lengths:
+    (BH,).  Returns (BH, d) in q.dtype.  Tolerance vs the f32 kernel is
+    bounded by the storage format's relative error (e4m3: 3 mantissa
+    bits, ~6%/element on K/V — see tests/test_kernels.py).
+    """
+    if k_pages.dtype == jnp.uint8:
+        # fp8 pools travel as uint8 bit patterns through the serving
+        # stack (core.mixed_precision.kv_storage_dtype); recover the
+        # e4m3 view here so the in-kernel f32 cast reads real values
+        k_pages = jax.lax.bitcast_convert_type(k_pages, jnp.float8_e4m3fn)
+        v_pages = jax.lax.bitcast_convert_type(v_pages, jnp.float8_e4m3fn)
+    bh, d = q.shape
+    _, page, _ = k_pages.shape
+    n_pages = page_table.shape[1]
+    scale = d ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # lengths, page_table
+        grid=(bh, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, i, lens, pt: (b, 0)),
+            pl.BlockSpec((1, page, d), lambda b, i, lens, pt: (pt[b, i], 0, 0)),
+            pl.BlockSpec((1, page, d), lambda b, i, lens, pt: (pt[b, i], 0, 0)),
+            pl.BlockSpec((1, page), lambda b, i, lens, pt: (pt[b, i], 0)),
+            pl.BlockSpec((1, page), lambda b, i, lens, pt: (pt[b, i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, i, lens, pt: (b, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_quantized_paged_decode_kernel, scale=scale,
+                          page=page, n_pages=n_pages),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), q,
+      k_pages, v_pages, k_scale, v_scale)

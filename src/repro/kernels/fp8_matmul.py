@@ -42,10 +42,28 @@ def _fp8_matmul_kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref, *,
 def fp8_matmul_pallas(a_q, b_q, a_scale, b_scale, *, bm: int = 128,
                       bn: int = 128, bk: int = 128, interpret: bool = False):
     """a_q: (M, K) e4m3; b_q: (K, N) e4m3; per-row-block / per-col-block
-    scales a_scale: (M//bm,), b_scale: (N//bn,). Returns (M, N) f32."""
+    scales a_scale: (M//bm,), b_scale: (N//bn,). Returns (M, N) f32.
+
+    Every dimension must be an exact multiple of its block size — the
+    grid is built by floor division, so a ragged edge would silently
+    drop the remainder rows/cols.  Ragged shapes raise ``ValueError``
+    naming the offender; the ``repro.kernels.ops.fp8_matmul`` wrapper
+    pads to block multiples before calling this."""
     m, k = a_q.shape
     k2, n = b_q.shape
-    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    if k != k2:
+        raise ValueError(
+            f"fp8_matmul_pallas: contraction mismatch — a_q is (M={m}, "
+            f"K={k}) but b_q is (K={k2}, N={n})")
+    for dim_name, dim, blk_name, blk in (
+            ("M", m, "bm", bm), ("N", n, "bn", bn), ("K", k, "bk", bk)):
+        if dim % blk != 0:
+            raise ValueError(
+                f"fp8_matmul_pallas: {dim_name}={dim} is not a multiple "
+                f"of {blk_name}={blk} (shapes a_q={a_q.shape}, "
+                f"b_q={b_q.shape}); the grid would silently truncate — "
+                "pad to block multiples or use repro.kernels.ops."
+                "fp8_matmul, which pads for you")
     k_steps = k // bk
 
     return pl.pallas_call(

@@ -119,6 +119,7 @@ def decode_attention(q, k, v, lengths, *, bk: int = 256,
 
 
 def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           k_scale=None, v_scale=None,
                            interpret: bool | None = None):
     """Single-token decode attention over a paged KV pool.
 
@@ -126,11 +127,20 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
     page_table: (B, n) int32 per-request logical->physical page map;
     lengths: (B,) valid-key counts.  Returns (B, 1, H, d).
 
+    When the pool is quantized (fp8/int8), pass ``k_scale``/``v_scale``
+    shaped (P, page, KVH) — one f32 scale per stored d-vector — and the
+    quantized kernel dequantizes the tiles in VMEM (both scales must be
+    given together).
+
     GQA expansion happens on the *page table*, not the pool: head h of
     request b reads pages ``kvh(h) * P + page_table[b]`` of the pool
     flattened to (KVH*P, page, d) — the big KV arrays are never repeated.
     """
-    from repro.kernels.decode_attention import paged_decode_attention_pallas
+    from repro.kernels.decode_attention import (
+        paged_decode_attention_pallas, quantized_paged_decode_attention_pallas)
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("paged_decode_attention: pass k_scale and v_scale "
+                         "together (quantized pool) or neither")
     interpret = (not _on_tpu()) if interpret is None else interpret
     B, _, H, d = q.shape
     P, page, KVH, _ = k_pages.shape
@@ -143,7 +153,16 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
           ).reshape(B * H, n)
     qf = q[:, 0].reshape(B * H, d)
     lens = jnp.repeat(lengths, H)
-    out = paged_decode_attention_pallas(qf, kf, vf, pt.astype(jnp.int32),
-                                        lens.astype(jnp.int32),
-                                        interpret=interpret)
+    if k_scale is not None:
+        # flatten scales exactly like the pools: (P, page, KVH) ->
+        # (KVH*P, page), so pt indexes values and scales identically
+        ksf = k_scale.transpose(2, 0, 1).reshape(KVH * P, page)
+        vsf = v_scale.transpose(2, 0, 1).reshape(KVH * P, page)
+        out = quantized_paged_decode_attention_pallas(
+            qf, kf, vf, ksf, vsf, pt.astype(jnp.int32),
+            lens.astype(jnp.int32), interpret=interpret)
+    else:
+        out = paged_decode_attention_pallas(qf, kf, vf, pt.astype(jnp.int32),
+                                            lens.astype(jnp.int32),
+                                            interpret=interpret)
     return out.reshape(B, 1, H, d)

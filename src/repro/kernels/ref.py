@@ -7,9 +7,18 @@ import jax.numpy as jnp
 
 def fp8_matmul_ref(a_q, b_q, a_scale, b_scale, *, bm: int = 128, bn: int = 128):
     """Dequantize-then-matmul oracle. Same per-block scale layout as the
-    kernel: a_scale[i] applies to rows [i*bm, (i+1)*bm)."""
+    kernel: a_scale[i] applies to rows [i*bm, (i+1)*bm) — so, like the
+    kernel, M and N must be exact multiples of the block sizes."""
     m, _ = a_q.shape
     _, n = b_q.shape
+    for dim_name, dim, blk_name, blk in (("M", m, "bm", bm),
+                                         ("N", n, "bn", bn)):
+        if dim % blk != 0:
+            raise ValueError(
+                f"fp8_matmul_ref: {dim_name}={dim} is not a multiple of "
+                f"{blk_name}={blk} (shapes a_q={a_q.shape}, "
+                f"b_q={b_q.shape}); the per-block scale layout cannot "
+                "cover a ragged edge — pad to block multiples first")
     sa = jnp.repeat(a_scale, bm)[:, None]
     sb = jnp.repeat(b_scale, bn)[None, :]
     out = jax.lax.dot_general(
@@ -62,3 +71,19 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
     k = k_pages[page_table].reshape(bh, -1, d)     # (BH, n*page, d)
     v = v_pages[page_table].reshape(bh, -1, d)
     return decode_attention_ref(q, k, v, lengths)
+
+
+def quantized_paged_decode_attention_ref(q, k_pages, v_pages, k_scale,
+                                         v_scale, page_table, lengths):
+    """Oracle for paged decode over quantized pools: dequantize every
+    page with its per-(slot, head-row) scales, then run the f32 paged
+    oracle.  k_pages/v_pages: (P, page, d) fp8/int8 — uint8 arrays are
+    fp8 bit patterns (core.mixed_precision.kv_storage_dtype) and are
+    bitcast to e4m3 before the value cast; k_scale/v_scale: (P, page)
+    f32 — one scale per stored d-vector."""
+    if k_pages.dtype == jnp.uint8:
+        k_pages = jax.lax.bitcast_convert_type(k_pages, jnp.float8_e4m3fn)
+        v_pages = jax.lax.bitcast_convert_type(v_pages, jnp.float8_e4m3fn)
+    k = k_pages.astype(jnp.float32) * k_scale[..., None]
+    v = v_pages.astype(jnp.float32) * v_scale[..., None]
+    return paged_decode_attention_ref(q, k, v, page_table, lengths)

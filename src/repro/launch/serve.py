@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.configs import (get_config, make_example_batch, reduced_config,
                            resolve_arch)
+from repro.core.mixed_precision import KV_DTYPES
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.parallel.sharding import rules_for_mesh, DEFAULT_RULES
@@ -201,7 +202,9 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
                 lazy_pages: bool = True, watermark: float = 0.05,
                 priority: str = "standard",
                 deadline_ms: Optional[float] = None,
-                admission: str = "fcfs", aging_ticks: int = 64):
+                admission: str = "fcfs", aging_ticks: int = 64,
+                kv_dtype: Optional[str] = None,
+                class_precision: Optional[Dict[str, str]] = None):
     """Drive the paged engine over a request stream.
 
     ``max_seq_len`` bounds prompt + generation per request and defaults
@@ -210,6 +213,11 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
     ``max_seq_len`` minus the generation budget.  Infeasible
     combinations raise here with the offending flags named instead of
     crashing inside ``submit``.
+
+    ``kv_dtype`` picks the KV pool storage precision (``fp8``/``int8``
+    quantize pages with per-token scales — see docs/serving.md
+    §"Quantized KV pages"); ``class_precision`` maps SLO classes to
+    minimum precisions, rejecting requests this pool cannot honor.
 
     ``admission`` picks the scheduler queue policy (``fcfs`` default,
     ``slo`` = priority + earliest-deadline-first with an ``aging_ticks``
@@ -238,7 +246,9 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
                              prefill_chunk=prefill_chunk,
                              prefix_cache=prefix_cache,
                              lazy_pages=lazy_pages, watermark=watermark,
-                             admission=admission, aging_ticks=aging_ticks)
+                             admission=admission, aging_ticks=aging_ticks,
+                             kv_dtype=kv_dtype,
+                             class_precision=class_precision)
     rng = np.random.default_rng(seed)
     for _ in range(requests):
         plen = (prompt_len if prompt_len
@@ -264,14 +274,22 @@ def serve_fleet(models, *, requests: int = 12, gen: int = 8,
                 priority: str = "standard",
                 deadline_ms: Optional[float] = None,
                 admission: str = "fcfs", aging_ticks: int = 64,
-                selection: str = "least-loaded"):
+                selection: str = "least-loaded",
+                kv_dtype: Optional[str] = None,
+                class_precision: Optional[Dict[str, str]] = None):
     """Drive a multi-model fleet over one mixed request stream.
 
     ``models`` is a ``--models``-style spec string
-    (``llama3-8b:2,qwen3-1.7b``; module-style aliases like ``llama3_8b``
-    resolve too) or a pre-parsed [(name, replicas), ...] list.  Every
-    engine in the fleet shares one ``total_pages`` host budget; requests
-    cycle across the models round-robin and rids are fleet-global, so
+    (``llama3-8b:2:fp8,qwen3-1.7b``; module-style aliases like
+    ``llama3_8b`` resolve too) or a pre-parsed
+    [(name, replicas[, kv_dtype]), ...] list.  ``kv_dtype`` is the
+    fleet-wide KV storage default for models whose spec entry leaves it
+    unset; ``class_precision`` maps SLO classes to minimum precisions,
+    steering those classes to replicas whose pool qualifies.  Every
+    engine in the fleet shares one ``total_pages`` host budget —
+    denominated in bytes when precisions are mixed, so quantized
+    replicas' cheaper pages draw proportionally less; requests cycle
+    across the models round-robin and rids are fleet-global, so
     per-request outputs match dedicated solo engines.  Returns the
     finished requests plus the fleet metrics snapshot (per-model
     tokens/s, TTFT, prefix hits, preemptions, SLO classes, budget
@@ -282,7 +300,9 @@ def serve_fleet(models, *, requests: int = 12, gen: int = 8,
         except ValueError as e:
             raise ValueError(f"--models: {e}") from None
     try:
-        models = [(resolve_arch(name), reps) for name, reps in models]
+        models = [(resolve_arch(m[0]), m[1],
+                   m[2] if len(m) > 2 and m[2] is not None else kv_dtype)
+                  for m in models]
     except KeyError as e:
         raise ValueError(f"--models: {e.args[0]}") from None
     if max_seq_len is None:
@@ -296,24 +316,26 @@ def serve_fleet(models, *, requests: int = 12, gen: int = 8,
             f"--max-seq-len {max_seq_len} leaves no room for prompts "
             f"after --gen {gen}; raise it or pass --prompt-len")
     entries = []
-    for i, (name, reps) in enumerate(models):
+    for i, (name, reps, dt) in enumerate(models):
         cfg = get_config(name)
         if reduced:
             cfg = reduced_config(cfg)
         params = M.init_params(M.param_specs(cfg),
                                jax.random.PRNGKey(seed + i),
                                dtype=jnp.float32)
-        entries.append(FleetModel(name, cfg, params, replicas=reps))
+        entries.append(FleetModel(name, cfg, params, replicas=reps,
+                                  kv_dtype=dt))
     fleet = ModelFleet(entries, total_pages=total_pages,
                        page_size=page_size, max_seats=max_seats,
                        max_seq_len=max_seq_len,
                        prefill_chunk=prefill_chunk, selection=selection,
                        prefix_cache=prefix_cache, lazy_pages=lazy_pages,
                        watermark=watermark, admission=admission,
-                       aging_ticks=aging_ticks)
+                       aging_ticks=aging_ticks,
+                       class_precision=class_precision)
     rng = np.random.default_rng(seed)
     for i in range(requests):
-        name, _ = models[i % len(models)]
+        name = models[i % len(models)][0]
         cfg = fleet.group(name).cfg
         plen = (prompt_len if prompt_len
                 else int(rng.integers(1, max_seq_len - gen)))
@@ -357,6 +379,49 @@ def add_slo_args(ap: argparse.ArgumentParser) -> None:
                          "gains one priority class per this many ticks")
 
 
+def parse_class_precision(spec: str) -> Dict[str, str]:
+    """Parse a ``--class-precision`` map: comma-separated
+    ``class=dtype`` entries, e.g. ``premium=bf16,standard=fp8``.
+    Values must come from :data:`~repro.core.mixed_precision.KV_DTYPES`
+    (deeper validation — class names, floor feasibility — happens in
+    the engine/fleet constructors, which name the offending class).
+
+    Raises:
+      ValueError: malformed entry or an unknown dtype name."""
+    out: Dict[str, str] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        cls, sep, dt = part.partition("=")
+        cls, dt = cls.strip(), dt.strip()
+        if not sep or not cls or not dt:
+            raise ValueError(
+                f"bad --class-precision entry {part!r}; expected "
+                "class=dtype, e.g. premium=bf16,standard=fp8")
+        if dt not in KV_DTYPES:
+            raise ValueError(
+                f"unknown kv dtype {dt!r} in --class-precision entry "
+                f"{part!r}; expected one of {', '.join(KV_DTYPES)}")
+        out[cls] = dt
+    return out
+
+
+def add_kv_precision_args(ap: argparse.ArgumentParser) -> None:
+    """Shared CLI KV-precision flags (paged engine and fleet)."""
+    ap.add_argument("--kv-dtype", choices=KV_DTYPES, default=None,
+                    help="KV pool storage precision; fp8/int8 quantize "
+                         "pages with per-token scales for ~4x the tokens "
+                         "per byte (default: the compute dtype). In "
+                         "--fleet mode this is the default for models "
+                         "whose --models entry has no :kv_dtype field")
+    ap.add_argument("--class-precision", default=None,
+                    help="SLO class -> minimum KV precision map, e.g. "
+                         "premium=bf16,standard=fp8; requests of a "
+                         "floored class only run on pools storing at "
+                         "least that precision")
+
+
 def sampling_from_args(args) -> SamplingParams:
     """Build :class:`SamplingParams` from ``add_sampling_args`` flags."""
     return SamplingParams(temperature=args.temperature, top_k=args.top_k,
@@ -391,8 +456,9 @@ def main():
                     help="serve a multi-model fleet (--models) instead of "
                          "one engine; implies the paged engine")
     ap.add_argument("--models", default="qwen3-1.7b:2,llama3-8b",
-                    help="fleet spec: comma-separated name[:replicas], "
-                         "e.g. llama3-8b:2,qwen3-1.7b (--fleet mode)")
+                    help="fleet spec: comma-separated "
+                         "name[:replicas[:kv_dtype]], e.g. "
+                         "llama3-8b:2:fp8,qwen3-1.7b (--fleet mode)")
     ap.add_argument("--selection", choices=("least-loaded", "round-robin"),
                     default="least-loaded",
                     help="replica selection policy (--fleet mode)")
@@ -428,9 +494,15 @@ def main():
                          "host-device-count flags (re-execs once to apply)")
     add_sampling_args(ap)
     add_slo_args(ap)
+    add_kv_precision_args(ap)
     args = ap.parse_args()
     apply_tuning_preset(args.tuning_preset)
     sampling = sampling_from_args(args)
+    try:
+        class_precision = (parse_class_precision(args.class_precision)
+                           if args.class_precision else None)
+    except ValueError as e:
+        ap.error(str(e))
     if args.fleet:
         try:
             r = serve_fleet(args.models, requests=args.requests,
@@ -446,7 +518,9 @@ def main():
                             deadline_ms=args.deadline_ms,
                             admission=args.admission,
                             aging_ticks=args.aging_ticks,
-                            selection=args.selection)
+                            selection=args.selection,
+                            kv_dtype=args.kv_dtype,
+                            class_precision=class_precision)
         except ValueError as e:
             ap.error(str(e))
         m = r["metrics"]
@@ -479,8 +553,12 @@ def main():
                         lazy_pages=args.lazy_pages, watermark=args.watermark,
                         priority=args.priority, deadline_ms=args.deadline_ms,
                         admission=args.admission,
-                        aging_ticks=args.aging_ticks)
+                        aging_ticks=args.aging_ticks,
+                        kv_dtype=args.kv_dtype,
+                        class_precision=class_precision)
         m = r["metrics"]
+        print(f"[serve.paged] kv_dtype={m['kv_dtype']} "
+              f"page_bytes={m['page_bytes']:.0f}")
         print(f"[serve.paged] {m['completed']:.0f} requests "
               f"{m['generated_tokens']:.0f} tokens in {m['wall_s'] * 1e3:.0f}ms "
               f"({m['tokens_per_s']:.1f} tok/s) "

@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import mixed_precision as mp
 from repro.models.modules import ParamSpec, rms_norm, rope
 
 NEG_INF = -1e30
@@ -155,14 +156,17 @@ def decode_attention(p, cfg, x, cache_k, cache_v, pos, *, kind: str = "attn",
     return proj, k, v
 
 
-def paged_attention(p, cfg, x, k_pool, v_pool, page_table, qpos, n_valid,
+def paged_attention(p, cfg, x, kv_entry, page_table, qpos, n_valid,
                     *, kind: str = "attn", impl: str = "auto"):
     """Attention against a paged KV pool (serving decode + chunked prefill).
 
     x: (A, C, D) — A seats, each advancing by up to C tokens this call
        (C=1 is plain decode; C>1 is one prefill chunk);
-    k_pool/v_pool: (P, page, KVH, hd) shared physical pages, page 0 is the
-       scratch page (writes from idle seats / chunk padding land there);
+    kv_entry: one layer-group's cache entry — ``{"k", "v"}`` pools of
+       (P, page, KVH, hd) shared physical pages (page 0 is the scratch
+       page: writes from idle seats / chunk padding land there), plus
+       ``{"ks", "vs"}`` (P, page, KVH) f32 per-(slot, head) scales when
+       the pool stores fp8/int8 (see models.model.init_paged_cache);
     page_table: (A, n) int32 — seat a's logical page i lives in physical
        page page_table[a, i] (dead entries 0);
     qpos: (A, C) int32 absolute position of each token;
@@ -174,10 +178,14 @@ def paged_attention(p, cfg, x, k_pool, v_pool, page_table, qpos, n_valid,
     the jnp path); 'auto' = pallas on TPU, jnp elsewhere.
 
     New K/V are scattered into the pool *before* the gather, so token t
-    attends to itself and everything earlier.  Returns
-    (out (A, C, D), new_k_pool, new_v_pool).
+    attends to itself and everything earlier.  For quantized pools each
+    written token's (KVH, hd) vector is amax-quantized independently and
+    its scales scattered with the same indices — write order never
+    changes a token's stored bytes.  Returns (out (A, C, D), new_entry).
     """
     A, C, _ = x.shape
+    k_pool, v_pool = kv_entry["k"], kv_entry["v"]
+    quantized = "ks" in kv_entry
     P, page = k_pool.shape[0], k_pool.shape[1]
     n = page_table.shape[1]
     q, k_new, v_new = _project_qkv(p, cfg, x, x, qpos, qpos)
@@ -187,19 +195,36 @@ def paged_attention(p, cfg, x, k_pool, v_pool, page_table, qpos, n_valid,
     phys = jnp.take_along_axis(page_table, blk, axis=1)          # (A, C)
     phys = jnp.where(valid_tok, phys, 0)                         # -> scratch
     off = jnp.where(valid_tok, qpos % page, 0)
-    k_pool = k_pool.at[phys, off].set(k_new)
-    v_pool = v_pool.at[phys, off].set(v_new)
+    if quantized:
+        kv_dtype = "fp8" if k_pool.dtype == jnp.uint8 else "int8"
+        kq, ks = mp.quantize_kv_page(k_new, kv_dtype)
+        vq, vs = mp.quantize_kv_page(v_new, kv_dtype)
+        k_pool = k_pool.at[phys, off].set(kq)
+        v_pool = v_pool.at[phys, off].set(vq)
+        ks_pool = kv_entry["ks"].at[phys, off].set(ks)
+        vs_pool = kv_entry["vs"].at[phys, off].set(vs)
+    else:
+        k_pool = k_pool.at[phys, off].set(k_new)
+        v_pool = v_pool.at[phys, off].set(v_new)
 
     hd = cfg.resolved_head_dim
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if impl == "pallas" and C == 1 and kind == "attn":
         from repro.kernels.ops import paged_decode_attention
-        out = paged_decode_attention(q, k_pool, v_pool, page_table,
-                                     qpos[:, 0] + 1)
+        out = paged_decode_attention(
+            q, k_pool, v_pool, page_table, qpos[:, 0] + 1,
+            k_scale=ks_pool if quantized else None,
+            v_scale=vs_pool if quantized else None)
+        out = out.astype(q.dtype)
     else:
-        k = k_pool[page_table].reshape(A, n * page, *k_pool.shape[2:])
-        v = v_pool[page_table].reshape(A, n * page, *v_pool.shape[2:])
+        if quantized:
+            kd = mp.dequantize_kv_page(k_pool, ks_pool).astype(q.dtype)
+            vd = mp.dequantize_kv_page(v_pool, vs_pool).astype(q.dtype)
+        else:
+            kd, vd = k_pool, v_pool
+        k = kd[page_table].reshape(A, n * page, *kd.shape[2:])
+        v = vd[page_table].reshape(A, n * page, *vd.shape[2:])
         kv_pos = jnp.broadcast_to(jnp.arange(n * page, dtype=jnp.int32),
                                   (A, n * page))
         keep = kv_pos[:, None, :] <= qpos[:, :, None]            # (A, C, T)
@@ -208,9 +233,15 @@ def paged_attention(p, cfg, x, k_pool, v_pool, page_table, qpos, n_valid,
                                           - cfg.sliding_window)
         out = _gqa_attend(q, k, v, lambda qp, kp: keep, qpos, kv_pos,
                           hd ** -0.5)
+    # a pool stored above the compute dtype (e.g. --kv-dtype f32 under
+    # bf16 compute) attends at pool precision; the residual stream stays
+    # in compute dtype either way
+    out = out.astype(x.dtype)
     proj = jnp.einsum("bshd,hdD->bsD", _head_mask(cfg, out),
                       p["wo"].astype(x.dtype))
-    return proj, k_pool, v_pool
+    new_entry = ({"k": k_pool, "v": v_pool, "ks": ks_pool, "vs": vs_pool}
+                 if quantized else {"k": k_pool, "v": v_pool})
+    return proj, new_entry
 
 
 def ring_decode_attention(p, cfg, x, cache_k, cache_v, pos):

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import mixed_precision
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -354,19 +355,54 @@ def paged_cache_supported(cfg: ModelConfig) -> bool:
             and all(k in ("attn", "attn_local") for k in cfg.layer_kinds()))
 
 
-def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     kv_dtype: Optional[str] = None):
     """Zero paged KV pools: {posN: {k,v: (G, num_pages, page, KVH, hd)}}.
 
     ``num_pages`` counts *physical* pages including the reserved scratch
-    page 0 (see runtime.paged_kv.BlockManager)."""
+    page 0 (see runtime.paged_kv.BlockManager).
+
+    ``kv_dtype`` picks the pool's storage precision (one of
+    ``core.mixed_precision.KV_DTYPES``); None keeps the config's compute
+    dtype — the pre-quantization layout, bit-for-bit.  Quantized dtypes
+    (fp8/int8) add f32 ``ks``/``vs`` scale leaves of
+    (G, num_pages, page, KVH) — one scale per stored (token, head)
+    vector, page-adjacent so copy-on-write and donation treat values
+    and scales as one pytree."""
     assert paged_cache_supported(cfg), cfg.name
     period = cfg.scan_period()
     g = cfg.num_layers // period
     kvh, hd = cfg.padded_kv_heads, cfg.resolved_head_dim
-    dt = jnp.dtype(cfg.compute_dtype)
+    if kv_dtype is None:
+        dt, quantized = jnp.dtype(cfg.compute_dtype), False
+    else:
+        dt = jnp.dtype(mixed_precision.kv_storage_dtype(kv_dtype))
+        quantized = mixed_precision.kv_is_quantized(kv_dtype)
     shape = (g, num_pages, page_size, kvh, hd)
-    return {f"pos{i}": {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
-            for i in range(period)}
+
+    def entry():
+        ent = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        if quantized:
+            sshape = (g, num_pages, page_size, kvh)
+            ent["ks"] = jnp.zeros(sshape, jnp.float32)
+            ent["vs"] = jnp.zeros(sshape, jnp.float32)
+        return ent
+
+    return {f"pos{i}": entry() for i in range(period)}
+
+
+def paged_page_bytes(cfg: ModelConfig, page_size: int,
+                     kv_dtype: Optional[str] = None) -> int:
+    """Bytes one physical page costs across the whole paged cache (all
+    layers, K and V, values plus scales for quantized dtypes) — the
+    figure byte-denominated budget accounting compares across engines
+    of different precisions (runtime.router.HostBudget)."""
+    kvh, hd = cfg.padded_kv_heads, cfg.resolved_head_dim
+    if kv_dtype is None:
+        tok = kvh * hd * jnp.dtype(cfg.compute_dtype).itemsize
+    else:
+        tok = kvh * mixed_precision.kv_token_bytes(kv_dtype, hd)
+    return cfg.num_layers * page_size * tok * 2      # K and V
 
 
 def copy_paged_page(cache, src, dst):
@@ -413,8 +449,8 @@ def paged_decode_step(params, cfg: ModelConfig, cache, tokens, pos,
             p = blk[f"pos{i}"]
             c = cac[f"pos{i}"]
             h = rms_norm(x, p["ln1"], cfg.norm_eps)
-            mix, nk, nv = attn_mod.paged_attention(
-                p["mixer"], cfg, h, c["k"], c["v"], page_table, qpos,
+            mix, nc = attn_mod.paged_attention(
+                p["mixer"], cfg, h, c, page_table, qpos,
                 n_valid, kind=kind, impl=opts.paged_attn_impl)
             x = x + mix
             if mlpk == "moe":
@@ -427,7 +463,7 @@ def paged_decode_step(params, cfg: ModelConfig, cache, tokens, pos,
                 hh = rms_norm(x, p["ln2"], cfg.norm_eps)
                 x = x + swiglu(hh, p["mlp"]["wg"], p["mlp"]["wu"],
                                p["mlp"]["wd"], x.dtype)
-            new_cac[f"pos{i}"] = {"k": nk, "v": nv}
+            new_cac[f"pos{i}"] = nc
         return x, new_cac
 
     x, new_cache = jax.lax.scan(

@@ -100,11 +100,16 @@ class BlockManager:
     """
 
     def __init__(self, num_pages: int, page_size: int, *,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, page_bytes: int = 1):
         assert num_pages >= 2, "need at least scratch + one usable page"
         self.num_pages = num_pages
         self.page_size = page_size
         self.prefix_cache = prefix_cache
+        # bytes one physical page costs (models.model.paged_page_bytes);
+        # lets byte-denominated budgets (runtime.router.HostBudget)
+        # compare pools of different KV precisions.  1 = unit weight:
+        # plain page counting, the single-precision default.
+        self.page_bytes = page_bytes
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._ref: Dict[int, int] = {}           # page -> live refcount
         # debugging aid only: SOME current holder (the allocating/reviving
@@ -149,6 +154,17 @@ class BlockManager:
     def cached(self) -> int:
         """Reclaimable pages kept only for their cached prefix content."""
         return len(self._reclaim)
+
+    @property
+    def bytes_in_use(self) -> int:
+        """Live-page footprint in bytes (``in_use * page_bytes``)."""
+        return self.in_use * self.page_bytes
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Effective token capacity of the usable pool — the figure a
+        quantized pool roughly multiplies at equal byte budget."""
+        return self.capacity * self.page_size
 
     def refcount(self, page: int) -> int:
         return self._ref.get(page, 0)
@@ -374,6 +390,12 @@ class EngineMetrics:
     the observable side of the SLO classes described in
     docs/serving.md."""
     page_capacity: int = 0
+    # KV storage precision of the pool behind these counters ("f32" /
+    # "bf16" / "fp8" / "int8"; "mixed" after merging differing engines)
+    # and bytes per physical page — the byte-denominated view of the
+    # pool that makes cross-precision comparisons honest
+    kv_dtype: Optional[str] = None
+    page_bytes: int = 1
     submitted: int = 0
     admitted: int = 0
     completed: int = 0
@@ -384,6 +406,7 @@ class EngineMetrics:
     decode_tokens: int = 0
     preemptions: int = 0         # decoding requests evicted under pressure
     pages_in_use: int = 0
+    bytes_in_use: int = 0        # pages_in_use * page_bytes, kept in tick()
     peak_pages_in_use: int = 0
     cached_pages: int = 0        # reclaimable prefix-cache pages (ref 0)
     evictions: int = 0           # cached pages reclaimed under pressure
@@ -455,6 +478,7 @@ class EngineMetrics:
         self.active = active
         self.peak_active = max(self.peak_active, active)
         self.pages_in_use = pages_in_use
+        self.bytes_in_use = pages_in_use * self.page_bytes
         self.peak_pages_in_use = max(self.peak_pages_in_use, pages_in_use)
         self.cached_pages = cached_pages
         self.evictions = evictions
@@ -476,6 +500,9 @@ class EngineMetrics:
         be simultaneous); ``ticks`` is the max (fleet engines tick in
         lockstep, idle engines skip).  The parts are not mutated."""
         out = cls()
+        dtypes = {m.kv_dtype for m in parts if m.kv_dtype is not None}
+        if dtypes:
+            out.kv_dtype = dtypes.pop() if len(dtypes) == 1 else "mixed"
         for m in parts:
             out.page_capacity += m.page_capacity
             out.submitted += m.submitted
@@ -488,6 +515,7 @@ class EngineMetrics:
             out.decode_tokens += m.decode_tokens
             out.preemptions += m.preemptions
             out.pages_in_use += m.pages_in_use
+            out.bytes_in_use += m.bytes_in_use
             out.peak_pages_in_use += m.peak_pages_in_use
             out.cached_pages += m.cached_pages
             out.evictions += m.evictions
@@ -566,6 +594,9 @@ class EngineMetrics:
             "preemptions": self.preemptions,
             "peak_active": self.peak_active,
             "page_capacity": self.page_capacity,
+            "kv_dtype": self.kv_dtype,
+            "page_bytes": self.page_bytes,
+            "kv_bytes_in_use": self.bytes_in_use,
             "pages_in_use": self.pages_in_use,
             "peak_pages_in_use": self.peak_pages_in_use,
             "cached_pages": self.cached_pages,

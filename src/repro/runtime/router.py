@@ -66,6 +66,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core import mixed_precision
 from repro.models import model as M
 from repro.parallel.sharding import LogicalRules, SINGLE_DEVICE_RULES
 from repro.runtime.paged_kv import BlockManager, EngineMetrics
@@ -75,16 +76,27 @@ from repro.runtime.serving import (DEFAULT_PRIORITY, PagedServingEngine,
 
 
 class HostBudget:
-    """One total-page figure carved across engines: floors + surplus.
+    """One total figure carved across engines: floors + surplus.
 
     Each registered :class:`BlockManager` is guaranteed ``floor`` live
-    pages; the surplus (``total - sum(floors)``) belongs to no engine
-    and is granted on demand: an engine may hold
-    ``floor + (surplus - pages its siblings have borrowed)`` live pages
-    at any instant.  The grant is re-evaluated at every allocation
-    (:meth:`allows` is called from ``BlockManager.can_alloc``), so the
-    split between models tracks the live load instead of a static
-    partition — *surplus redistribution at admission time*.
+    pages; the surplus belongs to no engine and is granted on demand:
+    an engine may hold its floor plus whatever surplus its siblings
+    have not borrowed at any instant.  The grant is re-evaluated at
+    every allocation (:meth:`allows` is called from
+    ``BlockManager.can_alloc``), so the split between models tracks
+    the live load instead of a static partition — *surplus
+    redistribution at admission time*.
+
+    The budget is denominated in BYTES, not pages, when engines differ
+    in KV precision: ``total_pages`` is interpreted as pages of
+    ``page_bytes`` bytes each (the reference page — by convention the
+    fleet's most expensive page), and each registered manager's live
+    pages are weighted by its own ``BlockManager.page_bytes``.  An fp8
+    engine whose pages cost a quarter of an f32 engine's can therefore
+    borrow ~4× as many pages from the same surplus — byte-for-byte
+    fairness across precisions.  With the default ``page_bytes=1`` on
+    both the budget and every manager, all the arithmetic collapses to
+    plain page counting (the single-precision behavior, unchanged).
 
     Reclaimable prefix-cache pages do not count against the budget:
     they are evictable at will by their own engine, so only *live*
@@ -96,20 +108,36 @@ class HostBudget:
     admission path caches failed attempts against that counter.
     """
 
-    def __init__(self, total_pages: int):
+    def __init__(self, total_pages: int, *, page_bytes: int = 1):
         if total_pages < 1:
             raise ValueError(f"total_pages must be >= 1, got {total_pages}")
+        if page_bytes < 1:
+            raise ValueError(f"page_bytes must be >= 1, got {page_bytes}")
         self.total = total_pages
+        self.page_bytes = page_bytes
+        self.total_bytes = total_pages * page_bytes
         self._floors: Dict[object, int] = {}
         self._managers: Dict[object, BlockManager] = {}
 
+    def _floor_bytes(self) -> int:
+        return sum(f * self._managers[k].page_bytes
+                   for k, f in self._floors.items())
+
+    @property
+    def surplus_bytes(self) -> int:
+        """Bytes beyond the floors, shared on demand."""
+        return self.total_bytes - self._floor_bytes()
+
     @property
     def surplus(self) -> int:
-        """Pages beyond the floors, shared on demand."""
-        return self.total - sum(self._floors.values())
+        """The surplus in reference pages (``surplus_bytes`` at
+        ``page_bytes`` per page) — equals ``total - sum(floors)`` when
+        every engine shares the budget's page cost."""
+        return self.surplus_bytes // self.page_bytes
 
     def register(self, key, bm: BlockManager, floor: int) -> None:
-        """Put ``bm`` under this budget with a guaranteed ``floor``.
+        """Put ``bm`` under this budget with a guaranteed ``floor`` (in
+        ``bm``'s own pages).
 
         Raises:
           ValueError: duplicate key, non-positive floor, or floors
@@ -118,27 +146,35 @@ class HostBudget:
             raise ValueError(f"budget key {key!r} already registered")
         if floor < 1:
             raise ValueError(f"floor must be >= 1, got {floor} for {key!r}")
-        if sum(self._floors.values()) + floor > self.total:
+        if self._floor_bytes() + floor * bm.page_bytes > self.total_bytes:
             raise ValueError(
                 f"floors exceed the host budget: registering {key!r} with "
-                f"floor {floor} on top of {sum(self._floors.values())} "
-                f"already-guaranteed pages > total {self.total}")
+                f"floor {floor} ({floor * bm.page_bytes} bytes) on top of "
+                f"{self._floor_bytes()} already-guaranteed bytes > total "
+                f"{self.total_bytes}")
         bm.attach_budget(self, key)     # raises first: a rejected manager
         self._floors[key] = floor       # must leave this budget untouched
         self._managers[key] = bm
 
     def borrowed(self, key) -> int:
-        """Live pages ``key`` currently holds beyond its floor."""
+        """Live pages ``key`` currently holds beyond its floor (in its
+        own pages)."""
         return max(0, self._managers[key].in_use - self._floors[key])
+
+    def borrowed_bytes(self, key) -> int:
+        """Bytes ``key`` currently holds beyond its floor."""
+        return self.borrowed(key) * self._managers[key].page_bytes
 
     def allows(self, key, n: int) -> bool:
         """Whether engine ``key`` may take ``n`` more live pages now:
         its post-alloc overshoot past its floor, plus what the other
-        engines have already borrowed, must fit in the surplus."""
+        engines have already borrowed, must fit in the surplus — all
+        weighted by each engine's own page cost in bytes."""
         bm = self._managers[key]
-        over = max(0, bm.in_use + n - self._floors[key])
-        others = sum(self.borrowed(k) for k in self._managers if k != key)
-        return over + others <= self.surplus
+        over = max(0, bm.in_use + n - self._floors[key]) * bm.page_bytes
+        others = sum(self.borrowed_bytes(k)
+                     for k in self._managers if k != key)
+        return over + others <= self.surplus_bytes
 
     def invalidate(self, source: BlockManager) -> None:
         """Bump every *other* registered manager's version: pages freed
@@ -149,15 +185,21 @@ class HostBudget:
                 bm.version += 1
 
     def usage(self) -> Dict[str, object]:
-        """Budget accounting snapshot: total / surplus plus per-engine
-        floor, live pages, and borrowed-beyond-floor counts."""
+        """Budget accounting snapshot: total / surplus (pages and
+        bytes) plus per-engine floor, live pages, borrowed-beyond-floor
+        counts and byte footprints."""
         return {
             "total_pages": self.total,
             "surplus_pages": self.surplus,
+            "total_bytes": self.total_bytes,
+            "surplus_bytes": self.surplus_bytes,
             "engines": {
                 str(k): {"floor": self._floors[k],
                          "in_use": self._managers[k].in_use,
-                         "borrowed": self.borrowed(k)}
+                         "borrowed": self.borrowed(k),
+                         "page_bytes": self._managers[k].page_bytes,
+                         "bytes_in_use": self._managers[k].bytes_in_use,
+                         "borrowed_bytes": self.borrowed_bytes(k)}
                 for k in sorted(self._managers, key=str)},
         }
 
@@ -175,12 +217,32 @@ class FleetModel:
     floor: guaranteed live pages per replica under the shared
         :class:`HostBudget`; None = enough pages for one max-length
         request (the minimum that keeps preempt-and-recompute
-        convergent)."""
+        convergent).
+    kv_dtype: KV pool storage precision per replica — None (compute
+        dtype everywhere), one dtype name for all replicas, or a
+        per-replica sequence (e.g. ``["f32", "fp8"]``: one
+        full-precision replica for precision-floored classes, one
+        quantized replica holding ~4× the tokens per byte)."""
     name: str
     cfg: object
     params: object
     replicas: int = 1
     floor: Optional[int] = None
+    kv_dtype: object = None         # None | str | Sequence[Optional[str]]
+
+    def replica_dtypes(self) -> List[Optional[str]]:
+        """Per-replica kv_dtype list, length ``replicas``.
+
+        Raises:
+          ValueError: a per-replica sequence of the wrong length."""
+        if self.kv_dtype is None or isinstance(self.kv_dtype, str):
+            return [self.kv_dtype] * self.replicas
+        dts = list(self.kv_dtype)
+        if len(dts) != self.replicas:
+            raise ValueError(
+                f"model {self.name!r}: kv_dtype sequence has {len(dts)} "
+                f"entries for {self.replicas} replicas")
+        return dts
 
 
 @dataclasses.dataclass
@@ -263,24 +325,35 @@ class ModelFleet:
                  sampler: Optional[Sampler] = None,
                  prefix_cache: bool = True, lazy_pages: bool = True,
                  watermark: float = 0.05, admission="fcfs",
-                 aging_ticks: int = 64):
+                 aging_ticks: int = 64,
+                 class_precision: Optional[Dict[str, str]] = None):
         """Build one engine per (model, replica) and carve the budget.
 
         Args:
           models: :class:`FleetModel` entries; names must be unique and
               every cfg must support the paged KV layout.
           total_pages: the host's total live-page budget, shared across
-              every engine in the fleet.
+              every engine in the fleet.  When replicas differ in KV
+              precision the budget is denominated in bytes — a
+              ``total_pages`` figure of the fleet's most expensive page
+              kind — and cheaper (quantized) pages draw
+              proportionally less from it (see :class:`HostBudget`).
           selection: replica selection policy — ``"least-loaded"``
               (default), ``"round-robin"``, or an object with
               ``select(group) -> int``.
+          class_precision: SLO-class → minimum KV precision map applied
+              fleet-wide (e.g. ``{"premium": "f32"}``); routing only
+              considers replicas whose pool meets the class's floor,
+              and every engine enforces the same floor at submit.
           (remaining args: per-engine knobs, as on
               :class:`PagedServingEngine`.)
 
         Raises:
           ValueError: no models, duplicate names, replicas < 1, a floor
-              too small to hold one max-length request, or floors that
-              exceed ``total_pages``.
+              too small to hold one max-length request, floors that
+              exceed ``total_pages``, or a ``class_precision`` floor no
+              replica of some model can meet (the class would be
+              unroutable there).
         """
         if not models:
             raise ValueError("a fleet needs at least one model")
@@ -309,31 +382,62 @@ class ModelFleet:
                 f"total_pages={total_pages}; raise the budget or lower "
                 "replicas/floors")
 
-        self.budget = HostBudget(total_pages)
+        # byte-denominate the budget against the fleet's most expensive
+        # page: a uniform-precision fleet collapses to page counting,
+        # while quantized replicas' cheaper pages draw proportionally
+        # less, so the same surplus grants them ~4x the pages
+        page_costs = {
+            (fm.name, i): M.paged_page_bytes(fm.cfg, page_size, dt)
+            for fm, _ in floors
+            for i, dt in enumerate(fm.replica_dtypes())}
+        ref_bytes = max(page_costs.values())
+        self.budget = HostBudget(total_pages, page_bytes=ref_bytes)
         self.page_size = page_size
         self.max_seq_len = max_seq_len
         self.selection = _make_selection(selection)
+        self.class_precision = dict(class_precision or {})
         self._groups: Dict[str, ReplicaGroup] = {}
         self._sessions: Dict[Tuple[str, str], int] = {}
         self._routes: Dict[int, Tuple[str, int]] = {}   # rid -> (model, idx)
         self._next_rid = 0
         self._tick = 0
-        surplus = total_pages - total_floor
+        surplus_bytes = (total_pages - total_floor) * ref_bytes
         for fm, floor in floors:
             engines = []
-            for i in range(fm.replicas):
+            for i, dt in enumerate(fm.replica_dtypes()):
+                # physical pool big enough to absorb the whole surplus
+                # at THIS replica's page cost (cheap pages -> more of
+                # them); the budget caps the live total in bytes
+                surplus_i = surplus_bytes // page_costs[(fm.name, i)]
                 eng = PagedServingEngine(
                     fm.cfg, fm.params, page_size=page_size,
-                    num_pages=floor + surplus + 1,   # +1: scratch page
+                    num_pages=floor + surplus_i + 1,   # +1: scratch page
                     max_seats=max_seats, max_seq_len=max_seq_len,
                     prefill_chunk=prefill_chunk, rules=rules, opts=opts,
                     sampler=sampler, prefix_cache=prefix_cache,
                     lazy_pages=lazy_pages, watermark=watermark,
-                    admission=admission, aging_ticks=aging_ticks)
+                    admission=admission, aging_ticks=aging_ticks,
+                    kv_dtype=dt, class_precision=self.class_precision)
                 self.budget.register((fm.name, i), eng.bm, floor)
                 engines.append(eng)
-            self._groups[fm.name] = ReplicaGroup(fm.name, fm.cfg,
-                                                 engines, floor)
+            group = ReplicaGroup(fm.name, fm.cfg, engines, floor)
+            for cls, want in self.class_precision.items():
+                if not any(self._replica_meets(eng, want)
+                           for eng in engines):
+                    raise ValueError(
+                        f"class_precision requires {want} for class "
+                        f"{cls!r} but no replica of model {fm.name!r} "
+                        f"stores KV at >= {want}; add a full-precision "
+                        "replica or drop the floor")
+            self._groups[fm.name] = group
+
+    @staticmethod
+    def _replica_meets(eng: PagedServingEngine, want: Optional[str]) -> bool:
+        """Whether ``eng``'s pool meets the precision floor ``want``."""
+        if want is None:
+            return True
+        return (mixed_precision.kv_precision_bits(eng.kv_dtype)
+                >= mixed_precision.kv_precision_bits(want))
 
     # -- routing ---------------------------------------------------------------
 
@@ -372,20 +476,39 @@ class ModelFleet:
         policy and pins the session to it; follow-up turns go to that
         home replica, where the session's earlier prompt pages are
         still registered in the prefix index (the multi-turn cache is
-        replica-local).  The rid comes from the fleet-global counter —
-        see the module docstring for why that makes routing
-        token-transparent.
+        replica-local).  When ``class_precision`` floors the request's
+        class, only replicas whose pool meets the floor are considered
+        — a pinned home replica that falls short is bypassed for this
+        request (the pin is kept for the session's other classes).
+        The rid comes from the fleet-global counter — see the module
+        docstring for why that makes routing token-transparent.
 
         Raises:
           ValueError: unknown model, or any :meth:`Scheduler.submit`
               validation failure (priority, deadline, placement)."""
         group = self.group(model)
+        want = self.class_precision.get(priority)
+        eligible = [i for i, eng in enumerate(group.engines)
+                    if self._replica_meets(eng, want)]
+        if not eligible:        # unreachable: constructor validated floors
+            raise ValueError(
+                f"no replica of {model!r} stores KV at >= {want} as "
+                f"class {priority!r} requires")
         idx = None
         if session_id is not None:
             idx = self._sessions.get((model, session_id))
+            if idx is not None and idx not in eligible:
+                idx = None                  # precision floor beats affinity
         if idx is None:
-            idx = (self.selection.select(group)
-                   if len(group.engines) > 1 else 0)
+            if len(eligible) == 1:
+                idx = eligible[0]
+            elif len(eligible) == len(group.engines):
+                idx = self.selection.select(group)
+            else:
+                sub = ReplicaGroup(group.name, group.cfg,
+                                   [group.engines[i] for i in eligible],
+                                   group.floor)
+                idx = eligible[self.selection.select(sub)]
             if not 0 <= idx < len(group.engines):
                 raise ValueError(
                     f"selection policy returned replica {idx} for "
@@ -487,43 +610,62 @@ class ModelFleet:
                 "budget": self.budget.usage(), "ticks": self._tick}
 
 
-def parse_models_spec(spec: str) -> List[Tuple[str, int]]:
+def parse_models_spec(spec: str) -> List[Tuple[str, int, Optional[str]]]:
     """Parse a ``--models`` fleet spec: comma-separated
-    ``name[:replicas]`` entries, e.g. ``llama3-8b:2,qwen3-1.7b`` (the
-    registry's module-style aliases like ``llama3_8b`` work too —
-    resolution happens in the caller via ``configs.resolve_arch``).
+    ``name[:replicas[:kv_dtype]]`` entries, e.g.
+    ``llama3-8b:2:fp8,qwen3-1.7b`` (the registry's module-style aliases
+    like ``llama3_8b`` work too — resolution happens in the caller via
+    ``configs.resolve_arch``).  The optional third field picks the
+    model's paged-KV storage precision (one of
+    :data:`repro.core.mixed_precision.KV_DTYPES`); omitted means the
+    engine default (full compute precision).
 
     Returns:
-      [(name, replicas), ...] in spec order (names unresolved).
+      [(name, replicas, kv_dtype_or_None), ...] in spec order (names
+      unresolved).
 
     Raises:
       ValueError: empty spec/entry, a non-integer or < 1 replica
-          count, or a duplicated name."""
-    entries: List[Tuple[str, int]] = []
+          count, an unknown kv dtype, or a duplicated name."""
+    entries: List[Tuple[str, int, Optional[str]]] = []
     if not spec.strip():
         raise ValueError("empty --models spec")
     for part in spec.split(","):
         part = part.strip()
         if not part:
             raise ValueError(f"empty entry in --models spec {spec!r}")
-        name, _, count = part.partition(":")
-        name = name.strip()
+        fields = [f.strip() for f in part.split(":")]
+        if len(fields) > 3:
+            raise ValueError(
+                f"too many ':' fields in --models entry {part!r}; "
+                "expected name[:replicas[:kv_dtype]]")
+        name = fields[0]
         if not name:
             raise ValueError(f"missing model name in entry {part!r}")
+        count = fields[1] if len(fields) > 1 else ""
         if count:
             try:
                 replicas = int(count)
             except ValueError:
                 raise ValueError(
                     f"bad replica count {count!r} in --models entry "
-                    f"{part!r}; expected name[:replicas]") from None
+                    f"{part!r}; expected name[:replicas[:kv_dtype]]"
+                ) from None
         else:
             replicas = 1
         if replicas < 1:
             raise ValueError(
                 f"replica count must be >= 1 in --models entry {part!r}")
-        if name in [n for n, _ in entries]:
+        kv_dtype: Optional[str] = None
+        if len(fields) > 2 and fields[2]:
+            kv_dtype = fields[2]
+            if kv_dtype not in mixed_precision.KV_DTYPES:
+                raise ValueError(
+                    f"unknown kv dtype {kv_dtype!r} in --models entry "
+                    f"{part!r}; expected one of "
+                    f"{', '.join(mixed_precision.KV_DTYPES)}")
+        if name in [n for n, _, _ in entries]:
             raise ValueError(f"model {name!r} appears twice in --models "
                              f"spec {spec!r}")
-        entries.append((name, replicas))
+        entries.append((name, replicas, kv_dtype))
     return entries

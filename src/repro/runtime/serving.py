@@ -105,6 +105,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mixed_precision
 from repro.models import model as M
 from repro.parallel.sharding import LogicalRules, SINGLE_DEVICE_RULES
 from repro.runtime.paged_kv import BlockManager, EngineMetrics, PrefixMatch
@@ -765,7 +766,9 @@ class PagedPolicy:
                  max_seats: int, max_seq_len: int, prefill_chunk: int,
                  rules: LogicalRules, opts: Optional[M.RunOptions],
                  prefix_cache: bool = True, lazy_pages: bool = True,
-                 watermark: float = 0.05, fused: bool = True):
+                 watermark: float = 0.05, fused: bool = True,
+                 kv_dtype: Optional[str] = None,
+                 class_precision: Optional[Dict[str, str]] = None):
         if not M.paged_cache_supported(cfg):
             raise ValueError(
                 f"{cfg.name}: paged KV needs a pure-attention decoder; "
@@ -778,8 +781,25 @@ class PagedPolicy:
         self.prefill_chunk = prefill_chunk
         self.rules = rules
         self.opts = opts or M.RunOptions(q_chunk=min(max_seq_len, 512))
+        # KV pool storage precision (uniform per engine; None = the
+        # config's compute dtype, the pre-quantization layout) and the
+        # per-SLO-class precision floors enforced by validate()
+        if kv_dtype is not None:
+            mixed_precision.kv_storage_dtype(kv_dtype)   # validate early
+        self.kv_dtype = kv_dtype
+        self.kv_dtype_name = kv_dtype or (
+            "bf16" if jnp.dtype(cfg.compute_dtype) == jnp.bfloat16 else "f32")
+        self.class_precision = dict(class_precision or {})
+        for cls, want in self.class_precision.items():
+            if cls not in PRIORITIES:
+                raise ValueError(
+                    f"class_precision names unknown class {cls!r}; "
+                    f"expected one of {sorted(PRIORITIES)}")
+            mixed_precision.kv_precision_bits(want)       # validate dtype
+        self.page_bytes = M.paged_page_bytes(cfg, page_size, kv_dtype)
 
-        self.bm = BlockManager(num_pages, page_size, prefix_cache=prefix_cache)
+        self.bm = BlockManager(num_pages, page_size, prefix_cache=prefix_cache,
+                               page_bytes=self.page_bytes)
         self.n_tables = max(1, -(-max_seq_len // page_size))
         self.lazy = lazy_pages
         # admission headroom so live requests usually grow unopposed
@@ -799,7 +819,8 @@ class PagedPolicy:
                 f"{self.n_tables} pages > capacity {self.bm.capacity}; "
                 "raise num_pages, lower max_seq_len, or set "
                 "lazy_pages=False")
-        self.cache = M.init_paged_cache(cfg, num_pages, page_size)
+        self.cache = M.init_paged_cache(cfg, num_pages, page_size,
+                                        kv_dtype=kv_dtype)
         self.page_table = np.zeros((max_seats, self.n_tables), np.int32)
         self.pos = np.zeros((max_seats,), np.int32)     # next write position
 
@@ -854,14 +875,26 @@ class PagedPolicy:
 
         Raises:
           ValueError: empty prompt; ``prompt + max_new_tokens`` >
-              ``max_seq_len``; or (reserved mode only) a page demand
-              over the whole pool's capacity.  In lazy mode the
-              constructor's ``n_tables <= capacity`` bound already
-              makes ``max_seq_len`` the per-request feasibility
-              limit."""
+              ``max_seq_len``; the request's SLO class carries a
+              precision floor (``class_precision``) this pool's
+              ``kv_dtype`` does not meet; or (reserved mode only) a
+              page demand over the whole pool's capacity.  In lazy
+              mode the constructor's ``n_tables <= capacity`` bound
+              already makes ``max_seq_len`` the per-request
+              feasibility limit."""
         total = len(req.prompt) + req.max_new_tokens
         if len(req.prompt) == 0:
             raise ValueError("empty prompt")
+        want = self.class_precision.get(req.priority)
+        if want is not None and (mixed_precision.kv_precision_bits(
+                self.kv_dtype_name)
+                < mixed_precision.kv_precision_bits(want)):
+            raise ValueError(
+                f"request class {req.priority!r} requires kv precision "
+                f">= {want} but this engine's pool stores "
+                f"{self.kv_dtype_name}; route it to a full-precision "
+                "replica (see runtime.router) or drop the class's "
+                "precision floor")
         if total > self.max_seq_len:
             raise ValueError(f"request needs {total} tokens > "
                              f"max_seq_len={self.max_seq_len}")
@@ -1203,7 +1236,18 @@ class PagedServingEngine(Scheduler):
     (the equivalence oracle).
     ``admission`` selects the queue policy (``"fcfs"`` default /
     ``"slo"``) and ``aging_ticks`` its anti-starvation bound — see
-    :class:`SLOAdmission` and docs/serving.md."""
+    :class:`SLOAdmission` and docs/serving.md.
+    ``kv_dtype`` picks the KV pool's storage precision
+    (``f32``/``bf16``/``fp8``/``int8``; None = the config's compute
+    dtype — the pre-quantization layout, token streams bit-identical
+    to it).  Quantized pools store per-(token, head) scales next to
+    the pages and dequantize inside the decode path, so the same
+    byte budget holds ~4× the tokens at hd=64 (docs/serving.md
+    §"Quantized KV pages").  ``class_precision`` maps SLO classes to
+    minimum precisions (e.g. ``{"premium": "f32"}``): a request whose
+    class's floor this pool cannot meet is rejected at submit — the
+    fleet router uses the same map to route such classes to
+    full-precision replicas."""
 
     default_max_ticks = 100_000
 
@@ -1215,17 +1259,22 @@ class PagedServingEngine(Scheduler):
                  sampler: Optional[Sampler] = None,
                  prefix_cache: bool = True, lazy_pages: bool = True,
                  watermark: float = 0.05, fused: bool = True,
-                 admission="fcfs", aging_ticks: int = 64):
+                 admission="fcfs", aging_ticks: int = 64,
+                 kv_dtype: Optional[str] = None,
+                 class_precision: Optional[Dict[str, str]] = None):
         policy = PagedPolicy(cfg, params, page_size=page_size,
                              num_pages=num_pages, max_seats=max_seats,
                              max_seq_len=max_seq_len,
                              prefill_chunk=prefill_chunk, rules=rules,
                              opts=opts, prefix_cache=prefix_cache,
                              lazy_pages=lazy_pages, watermark=watermark,
-                             fused=fused)
+                             fused=fused, kv_dtype=kv_dtype,
+                             class_precision=class_precision)
         super().__init__(policy, max_seats=max_seats, sampler=sampler,
                          page_capacity=policy.bm.capacity,
                          admission=admission, aging_ticks=aging_ticks)
+        self.metrics.kv_dtype = policy.kv_dtype_name
+        self.metrics.page_bytes = policy.page_bytes
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
@@ -1233,6 +1282,11 @@ class PagedServingEngine(Scheduler):
         self.prefill_chunk = prefill_chunk
         self.rules = rules
         self.opts = policy.opts
+
+    @property
+    def kv_dtype(self) -> str:
+        """The pool's storage precision name (resolved)."""
+        return self.policy.kv_dtype_name
 
     @property
     def bm(self) -> BlockManager:

@@ -49,6 +49,32 @@ def test_fp8_matmul_quant_error_bounded(m, k, n):
     assert rel < 0.08, rel                     # e4m3 ~2 mantissa bits
 
 
+def test_fp8_matmul_pallas_rejects_ragged_shapes():
+    """Regression: a non-multiple dimension used to be a bare assert (a
+    silent grid truncation with asserts stripped); it must raise a
+    ValueError naming the offending dimension and block."""
+    q = lambda shape: jnp.zeros(shape, jnp.float8_e4m3fn)
+    s = lambda n: jnp.ones((n,), jnp.float32)
+    with pytest.raises(ValueError, match=r"M=100 is not a multiple of bm=128"):
+        fp8_matmul_pallas(q((100, 128)), q((128, 128)), s(1), s(1),
+                          interpret=True)
+    with pytest.raises(ValueError, match=r"N=257 is not a multiple of bn=128"):
+        fp8_matmul_pallas(q((128, 128)), q((128, 257)), s(1), s(3),
+                          interpret=True)
+    with pytest.raises(ValueError, match=r"K=70 is not a multiple of bk=128"):
+        fp8_matmul_pallas(q((128, 70)), q((70, 128)), s(1), s(1),
+                          interpret=True)
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        fp8_matmul_pallas(q((128, 128)), q((256, 128)), s(1), s(1),
+                          interpret=True)
+    with pytest.raises(ValueError, match=r"M=100"):
+        ref.fp8_matmul_ref(q((100, 128)), q((128, 128)), s(1), s(1))
+    # the padding wrapper still accepts the same ragged shape
+    a = jax.random.normal(jax.random.PRNGKey(0), (100, 70), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (70, 50), jnp.float32)
+    assert ops.fp8_matmul(a, b, interpret=True).shape == (100, 50)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("sq,skv,h,kvh,d", [
     (64, 64, 4, 4, 32), (128, 128, 8, 2, 64), (96, 200, 4, 1, 32),

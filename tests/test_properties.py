@@ -6,7 +6,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.core.mixed_precision import quantize_fp8, F8_MAX
+from repro.core.mixed_precision import (quantize_fp8, quantize_kv_page,
+                                        dequantize_kv_page, F8_MAX)
 from repro.core.topology import (RailTopology, hierarchical_allreduce_cost,
                                  flat_allreduce_cost, roofline)
 from repro.launch.hlo_analysis import analyze
@@ -24,6 +25,53 @@ def test_fp8_quantization_relative_error_bound(scale, seed):
     assert float(jnp.max(jnp.abs(q.astype(jnp.float32)))) <= F8_MAX
     err = jnp.abs(q.astype(jnp.float32) * s - x)
     assert float(jnp.max(err)) <= float(jnp.max(jnp.abs(x))) * 0.25 + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**16),
+       axis=st.sampled_from([None, 0, 1, -1]))
+def test_fp8_quantization_keepdims_contract(scale, seed, axis):
+    """Property: ``axis=None`` yields a 0-d scalar scale; any explicit
+    axis keeps the reduced dimension, so ``q.astype(f32) * scale``
+    reconstructs x elementwise without reshaping in either case."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 16)) * scale
+    q, s = quantize_fp8(x, axis=axis)
+    if axis is None:
+        assert s.shape == ()
+    else:
+        want = list(x.shape)
+        want[axis] = 1
+        assert s.shape == tuple(want)
+    err = jnp.abs(q.astype(jnp.float32) * s - x)
+    assert float(jnp.max(err)) <= float(jnp.max(jnp.abs(x))) * 0.25 + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**16))
+def test_kv_page_int8_roundtrip_within_half_step(scale, seed):
+    """Property: int8 KV round-trip error is at most half a quantization
+    step per element — |x - q·s| <= s/2 with s the (token, head) scale."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 8, 16)) * scale
+    q, s = quantize_kv_page(x, "int8")
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+    err = jnp.abs(dequantize_kv_page(q, s) - x)
+    assert bool(jnp.all(err <= s[..., None] * 0.5 + 1e-9))
+
+
+@settings(max_examples=50, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**16))
+def test_kv_page_fp8_roundtrip_relative_bound(scale, seed):
+    """Property: fp8 (e4m3, 3 mantissa bits) KV round-trip error is
+    *relative* — bounded per element by |x|·2^-3 plus one denormal step
+    (448·s/2^10), never by the int8-style s/2 absolute bound."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 8, 16)) * scale
+    q, s = quantize_kv_page(x, "fp8")
+    assert q.dtype == jnp.uint8      # e4m3 bit patterns (storage dtype)
+    vals = jax.lax.bitcast_convert_type(q, jnp.float8_e4m3fn)
+    assert float(jnp.max(jnp.abs(vals.astype(jnp.float32)))) <= F8_MAX
+    err = jnp.abs(dequantize_kv_page(q, s) - x)
+    bound = jnp.abs(x) * 0.125 + s[..., None] * (F8_MAX / 1024.0)
+    assert bool(jnp.all(err <= bound + 1e-9))
 
 
 # -- topology cost model -------------------------------------------------------

@@ -88,7 +88,11 @@ class TestHostBudget:
         a.alloc(5, rid=0)
         u = budget.usage()
         assert u["total_pages"] == 10 and u["surplus_pages"] == 4
-        assert u["engines"]["m0"] == {"floor": 3, "in_use": 5, "borrowed": 2}
+        m0 = u["engines"]["m0"]
+        assert (m0["floor"], m0["in_use"], m0["borrowed"]) == (3, 5, 2)
+        # byte-denominated fields ride along (page_bytes defaults to 1)
+        assert (m0["page_bytes"], m0["bytes_in_use"],
+                m0["borrowed_bytes"]) == (1, 5, 2)
         assert u["engines"]["m1"]["in_use"] == 0
 
     def test_register_validation(self):
@@ -172,11 +176,17 @@ def test_engine_metrics_merged():
 
 def test_parse_models_spec():
     assert parse_models_spec("llama3-8b:2,qwen3-1.7b") == \
-        [("llama3-8b", 2), ("qwen3-1.7b", 1)]
-    assert parse_models_spec(" a:1 , b:3 ") == [("a", 1), ("b", 3)]
+        [("llama3-8b", 2, None), ("qwen3-1.7b", 1, None)]
+    assert parse_models_spec(" a:1 , b:3 ") == \
+        [("a", 1, None), ("b", 3, None)]
+    assert parse_models_spec("a:2:fp8,b:1:f32,c") == \
+        [("a", 2, "fp8"), ("b", 1, "f32"), ("c", 1, None)]
+    assert parse_models_spec("a::int8") == [("a", 1, "int8")]
     for bad, msg in (("", "empty"), ("a,,b", "empty entry"),
                      (":2", "missing model name"), ("a:x", "bad replica"),
-                     ("a:0", ">= 1"), ("a,a", "twice")):
+                     ("a:0", ">= 1"), ("a,a", "twice"),
+                     ("a:2:fp7", "unknown kv dtype"),
+                     ("a:2:fp8:x", "too many")):
         with pytest.raises(ValueError, match=msg):
             parse_models_spec(bad)
 
