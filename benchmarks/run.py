@@ -111,7 +111,9 @@ def kernels_table():
         flops = 2 * 512 ** 3
         emit(name, us, f"gflops={flops / us / 1e3:.2f}")
 
-    q = jax.random.normal(key, (8, 256, 64), jnp.bfloat16)
+    # fresh stream: `key` itself already seeded the matmul operand `a`
+    q = jax.random.normal(jax.random.fold_in(key, 2), (8, 256, 64),
+                          jnp.bfloat16)
     att = jax.jit(lambda q: ref.attention_ref(q, q, q, causal=True))
     att(q).block_until_ready()
     t0 = time.perf_counter()

@@ -1,70 +1,24 @@
 #!/usr/bin/env python
 """Check intra-repo markdown links in docs/ and README.md.
 
-Every ``[text](target)`` whose target is a relative path must resolve to
-a file in the repo (anchors are stripped; ``http(s)://`` and ``mailto:``
-targets are skipped).  Also enforces the docs-set contract: README.md
-must link both docs/serving.md and docs/benchmarks.md.
+Thin shim kept for muscle memory and old CI references — the logic
+lives in :mod:`repro.analysis.docscheck` and the canonical entry point
+is::
 
-Run from the repo root (CI's docs job does):
-
-  python scripts/check_doc_links.py
+  PYTHONPATH=src python -m repro.analysis --docs
 
 Exits non-zero listing every broken reference.
 """
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
-LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-EXTERNAL = ("http://", "https://", "mailto:")
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
 
-
-def md_files(root: Path):
-    files = [root / "README.md"]
-    files += sorted((root / "docs").glob("*.md"))
-    return [f for f in files if f.exists()]
-
-
-def check(root: Path):
-    errors = []
-    readme_targets = set()
-    for f in md_files(root):
-        for m in LINK.finditer(f.read_text()):
-            target = m.group(1).split("#")[0]
-            if not target or target.startswith(EXTERNAL):
-                continue
-            resolved = (f.parent / target).resolve()
-            if f.name == "README.md":
-                readme_targets.add(target)
-            if not resolved.exists():
-                errors.append(f"{f.relative_to(root)}: broken link "
-                              f"-> {m.group(1)}")
-    required = {"docs/serving.md", "docs/benchmarks.md"}
-    missing = {r for r in required
-               if not any(t.endswith(r.split('/')[-1])
-                          for t in readme_targets)}
-    for r in sorted(missing):
-        errors.append(f"README.md: missing required link to {r}")
-    if not (root / "README.md").exists():
-        errors.append("README.md does not exist")
-    return errors
-
-
-def main():
-    root = Path(__file__).resolve().parent.parent
-    errors = check(root)
-    if errors:
-        print(f"{len(errors)} broken doc reference(s):")
-        for e in errors:
-            print(f"  {e}")
-        return 1
-    n = len(md_files(root))
-    print(f"doc links ok across {n} markdown file(s)")
-    return 0
+from repro.analysis.docscheck import run_docs_check  # noqa: E402
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(run_docs_check(ROOT))

@@ -3,10 +3,17 @@
 #
 #   scripts/run_tests.sh              # full tier-1 suite
 #   FAST=1 scripts/run_tests.sh       # skip slow/multidevice tests
+#   scripts/run_tests.sh --lint       # repro-lint + doc links only (no pytest)
 #   scripts/run_tests.sh tests/test_paged_kv.py   # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--lint" ]]; then
+  shift
+  python -m repro.analysis "$@"
+  python -m repro.analysis --docs
+  exit 0
+fi
 extra=()
 if [[ "${FAST:-0}" == "1" ]]; then
   extra+=(-m "not slow and not multidevice")

@@ -1,0 +1,38 @@
+"""repro-lint: AST-based static analysis for the serving hot path.
+
+The serving stack keeps re-fixing the same classes of latent JAX hazard
+by hand — a full ``(max_seats, vocab)`` host pull inside the decode
+sampler, retrace churn before the ``(max_seats,)`` shape pin, fp8
+structural ops silently legalizing through whole-pool f16 round trips.
+This package catches them mechanically, in CI, with no third-party
+dependencies (it never imports jax — the lint job runs on a bare
+Python):
+
+    RL001  implicit host<->device transfer/sync in a declared hot path
+    RL002  retrace hazard at a ``jax.jit`` boundary
+    RL003  donated buffer referenced after the jitted call
+    RL004  PRNG key reuse without split/fold_in
+    RL005  host side effects (print/open/clock) inside a traced function
+    RL006  structural ops on float8 arrays (travel as uint8 bit patterns)
+
+Hot-path scope is declared in the checked-in manifest
+``hotpaths.toml`` (next to this file); findings honor inline
+``# repro-lint: disable=RLxxx`` suppressions and the committed
+``baseline.json`` so adoption only ever ratchets down.  Run it as::
+
+    python -m repro.analysis                 # lint the declared scan roots
+    python -m repro.analysis --format=github # CI annotations
+    python -m repro.analysis --docs          # markdown link check (one driver)
+
+See docs/static_analysis.md for the rule catalog (each rule's motivating
+incident), the suppression/baseline workflow, and how to declare a new
+hot path.
+"""
+from repro.analysis.engine import AnalysisResult, Finding, analyze_paths
+from repro.analysis.manifest import Manifest, ModuleDecl, load_manifest
+from repro.analysis.rules import RULES, rule_ids
+
+__all__ = [
+    "AnalysisResult", "Finding", "Manifest", "ModuleDecl", "RULES",
+    "analyze_paths", "load_manifest", "rule_ids",
+]

@@ -1,0 +1,76 @@
+"""Baseline file: known findings that don't fail the build (yet).
+
+The baseline makes adoption incremental and monotonic: findings present
+when a rule lands get recorded once, CI fails only on *new* findings,
+and the count can only ratchet down (regenerate with
+``--write-baseline`` after fixing, never to admit new debt).
+
+Entries are keyed ``(rule, file, symbol, snippet)`` — deliberately
+line-number-free so edits elsewhere in a file don't invalidate the
+baseline — and stored as a multiset: two identical hot-path pulls on
+identical source lines need two entries.
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+from typing import List, Tuple
+
+from repro.analysis.engine import Finding
+
+_FIELDS = ("rule", "file", "symbol", "snippet")
+
+
+def default_baseline_path() -> Path:
+    return Path(__file__).resolve().parent / "baseline.json"
+
+
+def load_baseline(path: Path) -> Counter:
+    """The baseline as a multiset of finding keys (empty if the file
+    doesn't exist — a missing baseline means nothing is grandfathered).
+
+    Raises:
+      ValueError: the file exists but is not a valid baseline document.
+    """
+    if not path.exists():
+        return Counter()
+    data = json.loads(path.read_text())
+    if not isinstance(data, dict) or "findings" not in data:
+        raise ValueError(f"{path}: expected {{'findings': [...]}}")
+    keys = Counter()
+    for entry in data["findings"]:
+        keys[tuple(entry.get(f, "") for f in _FIELDS)] += 1
+    return keys
+
+
+def write_baseline(path: Path, findings: List[Finding]) -> int:
+    """Record ``findings`` as the new baseline; returns the count."""
+    entries = [dict(zip(_FIELDS, f.baseline_key()))
+               for f in sorted(findings, key=Finding.sort_key)]
+    doc = {
+        "comment": "repro-lint baseline — regenerate with "
+                   "`python -m repro.analysis --write-baseline` only "
+                   "after FIXING findings, never to admit new ones",
+        "findings": entries,
+    }
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    return len(entries)
+
+
+def split_baselined(findings: List[Finding],
+                    baseline: Counter) -> Tuple[List[Finding],
+                                                List[Finding]]:
+    """Partition into (new, baselined).  Multiset semantics: each
+    baseline entry absolves at most one finding."""
+    budget = Counter(baseline)
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        key = f.baseline_key()
+        if budget[key] > 0:
+            budget[key] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    return new, old

@@ -1,0 +1,102 @@
+"""Command line driver for ``python -m repro.analysis``.
+
+Exit status: 0 when there are no non-baselined findings (and, with
+``--docs``, no broken links); 1 otherwise.  ``--write-baseline``
+records the current findings and exits 0 — use it only after fixing,
+never to admit new debt.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis import report
+from repro.analysis.docscheck import run_docs_check
+from repro.analysis.engine import analyze_paths
+from repro.analysis.manifest import load_manifest
+from repro.analysis.rules import RULES, get_rules
+
+
+def default_root() -> Path:
+    """Repo root when running from a checkout: src/repro/analysis/cli.py
+    -> up four levels."""
+    return Path(__file__).resolve().parents[3]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: AST-based JAX-hazard analysis for the "
+                    "serving hot path (RL001-RL006), plus the markdown "
+                    "link check (--docs).")
+    p.add_argument("--root", type=Path, default=None,
+                   help="repo root to analyze (default: the checkout "
+                        "containing this package)")
+    p.add_argument("--manifest", type=Path, default=None,
+                   help="hot-path manifest (default: the checked-in "
+                        "analysis/hotpaths.toml)")
+    p.add_argument("--baseline", type=Path, default=None,
+                   help="baseline file (default: the checked-in "
+                        "analysis/baseline.json)")
+    p.add_argument("--format", choices=("text", "json", "github"),
+                   default="text", help="report format")
+    p.add_argument("--rules", default=None, metavar="RL001,RL002",
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="record current findings as the baseline and "
+                        "exit 0 (only after fixing — the count must "
+                        "only ratchet down)")
+    p.add_argument("--docs", action="store_true",
+                   help="run the markdown link check instead of the "
+                        "lint rules")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    root = (args.root or default_root()).resolve()
+
+    if args.list_rules:
+        for rule in RULES:
+            print(f"{rule.id}  {rule.title}")
+            print(f"       {rule.brief}")
+        return 0
+
+    if args.docs:
+        return run_docs_check(root)
+
+    try:
+        manifest = load_manifest(args.manifest)
+    except (OSError, ValueError) as e:
+        print(f"repro-lint: cannot load manifest: {e}", file=sys.stderr)
+        return 2
+    rules = RULES
+    if args.rules:
+        try:
+            rules = get_rules({r.strip() for r in args.rules.split(",")
+                               if r.strip()})
+        except ValueError as e:
+            print(f"repro-lint: {e}", file=sys.stderr)
+            return 2
+
+    result = analyze_paths(root, manifest, rules)
+
+    baseline_path = args.baseline or baseline_mod.default_baseline_path()
+    if args.write_baseline:
+        n = baseline_mod.write_baseline(baseline_path, result.findings)
+        print(f"repro-lint: wrote {n} finding(s) to {baseline_path}")
+        return 0
+
+    try:
+        known = baseline_mod.load_baseline(baseline_path)
+    except ValueError as e:
+        print(f"repro-lint: bad baseline: {e}", file=sys.stderr)
+        return 2
+    new, baselined = baseline_mod.split_baselined(result.findings, known)
+    report.emit(args.format, new, baselined, result, sys.stdout)
+    return 1 if new else 0

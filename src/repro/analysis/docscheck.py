@@ -1,0 +1,62 @@
+"""Markdown link checking — the ``--docs`` mode of the analysis driver.
+
+Formerly ``scripts/check_doc_links.py`` (that script is now a thin shim
+over this module so there is exactly one analysis entry point).  Every
+``[text](target)`` in README.md and docs/*.md whose target is a
+relative path must resolve to a file in the repo; anchors are stripped
+and external schemes skipped.  Also enforces the docs-set contract:
+README.md must link the required docs pages.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+from typing import List
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+REQUIRED_README_LINKS = ("docs/serving.md", "docs/benchmarks.md",
+                         "docs/static_analysis.md")
+
+
+def md_files(root: Path) -> List[Path]:
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_docs(root: Path) -> List[str]:
+    """All broken doc references under ``root`` (empty when green)."""
+    errors: List[str] = []
+    readme_targets = set()
+    for f in md_files(root):
+        for m in LINK.finditer(f.read_text()):
+            target = m.group(1).split("#")[0]
+            if not target or target.startswith(EXTERNAL):
+                continue
+            resolved = (f.parent / target).resolve()
+            if f.name == "README.md":
+                readme_targets.add(target)
+            if not resolved.exists():
+                errors.append(f"{f.relative_to(root)}: broken link "
+                              f"-> {m.group(1)}")
+    missing = {r for r in REQUIRED_README_LINKS
+               if not any(t.endswith(r.split("/")[-1])
+                          for t in readme_targets)}
+    for r in sorted(missing):
+        errors.append(f"README.md: missing required link to {r}")
+    if not (root / "README.md").exists():
+        errors.append("README.md does not exist")
+    return errors
+
+
+def run_docs_check(root: Path) -> int:
+    """CLI body for ``python -m repro.analysis --docs``."""
+    errors = check_docs(root)
+    if errors:
+        print(f"{len(errors)} broken doc reference(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"doc links ok across {len(md_files(root))} markdown file(s)")
+    return 0

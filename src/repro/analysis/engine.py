@@ -1,0 +1,525 @@
+"""Analysis engine: parsing, taint inference, suppressions, traversal.
+
+The engine turns each Python source file into a :class:`ModuleContext`
+— the parsed AST plus everything the rules need to reason locally:
+
+* an import-alias map so ``jnp.asarray`` and ``jax.numpy.asarray``
+  canonicalize to the same dotted name,
+* a registry of jit-wrapped callables (``self._step_fn = jax.jit(...)``
+  assignments and ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorators)
+  with their ``static_*`` / ``donate_argnums`` facts,
+* per-function *taint* inference classifying expressions as DEVICE
+  (jax array), HOST (numpy / Python scalar) or UNKNOWN, in statement
+  order with no cross-branch merging — deliberately simple and local,
+  which is what keeps the rules explainable,
+* suppression pragmas (``# repro-lint: disable=RL001,RL002``, bare
+  ``disable``, and file-level ``disable-file``).
+
+Rules (see :mod:`repro.analysis.rules`) are pure functions from a
+context to findings; :func:`analyze_paths` applies them over the scan
+roots and filters suppressed findings.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.manifest import Manifest, ModuleDecl
+
+DEVICE = "device"
+HOST = "host"
+UNKNOWN = "unknown"
+
+# Call roots whose results are jax arrays living on device.
+_DEVICE_ROOTS = ("jax.numpy.", "jax.lax.", "jax.nn.", "jax.random.",
+                 "jax.scipy.", "jax.device_put", "jax.tree_util.")
+# Call roots whose results live on host.
+_HOST_ROOTS = ("numpy.",)
+_HOST_BUILTINS = {"int", "float", "bool", "len", "min", "max", "sum",
+                  "range", "list", "tuple", "sorted", "enumerate", "zip",
+                  "abs", "round", "str"}
+
+_PRAGMA_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable-file|disable)\s*(?:=\s*([A-Z0-9,\s]+))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic, keyed ``file:line RLxxx`` for reporting."""
+    rule: str
+    file: str            # repo-relative posix path
+    line: int
+    col: int
+    symbol: str          # enclosing function qualname, or "<module>"
+    message: str
+    snippet: str = ""    # stripped source line (baseline identity)
+
+    def baseline_key(self) -> Tuple[str, str, str, str]:
+        """Line-number-independent identity used by the baseline file,
+        so unrelated edits above a baselined finding don't break CI."""
+        return (self.rule, self.file, self.symbol, self.snippet)
+
+    def sort_key(self):
+        return (self.file, self.line, self.col, self.rule)
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: List[Finding]
+    files_scanned: int
+    suppressed: int      # count silenced by inline pragmas
+
+
+# -- suppressions ------------------------------------------------------------
+
+def parse_suppressions(source: str):
+    """Map line number -> set of suppressed rule ids (``{"*"}`` for a
+    bare ``disable``).  Returns ``(per_line, file_wide)`` where
+    ``file_wide`` is the set suppressed for the whole file."""
+    per_line: Dict[int, Set[str]] = {}
+    file_wide: Set[str] = set()
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if not m:
+            continue
+        rules = ({r.strip() for r in m.group(2).split(",") if r.strip()}
+                 if m.group(2) else {"*"})
+        if m.group(1) == "disable-file":
+            file_wide |= rules
+        else:
+            per_line.setdefault(lineno, set()).update(rules)
+    return per_line, file_wide
+
+
+def is_suppressed(finding: Finding, per_line, file_wide) -> bool:
+    if "*" in file_wide or finding.rule in file_wide:
+        return True
+    rules = per_line.get(finding.line, ())
+    return "*" in rules or finding.rule in rules
+
+
+# -- jit registry ------------------------------------------------------------
+
+@dataclasses.dataclass
+class JitDecl:
+    """Facts about one jit-wrapped callable usable at its call sites."""
+    name: str                      # call pattern, e.g. "self._step_fn"
+    line: int
+    has_static: bool = False       # static_argnums/static_argnames given
+    donate: Tuple[int, ...] = ()   # donated positional indices
+    donate_conditional: bool = False
+
+
+def _int_constants(node: ast.AST) -> Tuple[int, ...]:
+    """All integer literals inside ``node`` — resolves plain tuples and,
+    best effort, conditionals like ``(0,) if backend != 'cpu' else ()``
+    (analyzing as-if-donated is the conservative read: the code must be
+    safe on the backend that does donate)."""
+    out = []
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, int) \
+                and not isinstance(sub.value, bool):
+            out.append(sub.value)
+    return tuple(sorted(set(out)))
+
+
+class ModuleContext:
+    """Everything rules need about one source file."""
+
+    def __init__(self, path: Path, relpath: str, source: str,
+                 tree: ast.Module, manifest: Manifest):
+        self.path = path
+        self.relpath = relpath
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self.manifest = manifest
+        self.decl: ModuleDecl = manifest.decl(relpath)
+        self.aliases = self._collect_aliases(tree)
+        self.functions = self._collect_functions(tree)
+        self.jits = self._collect_jits(tree)
+
+    # -- names ---------------------------------------------------------------
+
+    @staticmethod
+    def _collect_aliases(tree: ast.Module) -> Dict[str, str]:
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+        return aliases
+
+    def dotted(self, node: ast.AST) -> str:
+        """Raw dotted path of a Name/Attribute chain ("" otherwise)."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+        elif isinstance(node, ast.Call):
+            parts.append("()")       # keep chains like f(x).block_until_ready
+        else:
+            return ""
+        return ".".join(reversed(parts))
+
+    def canon(self, node: ast.AST) -> str:
+        """Canonical dotted name with import aliases resolved at the
+        root (``jnp.asarray`` -> ``jax.numpy.asarray``)."""
+        raw = self.dotted(node)
+        if not raw:
+            return ""
+        head, _, rest = raw.partition(".")
+        head = self.aliases.get(head, head)
+        return f"{head}.{rest}" if rest else head
+
+    # -- functions -----------------------------------------------------------
+
+    @staticmethod
+    def _collect_functions(tree: ast.Module):
+        """[(qualname, FunctionDef)] for every def, nested by class."""
+        out: List[Tuple[str, ast.FunctionDef]] = []
+
+        def visit(node, prefix):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = f"{prefix}{child.name}"
+                    out.append((qual, child))
+                    visit(child, f"{qual}.")
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, f"{prefix}{child.name}.")
+
+        visit(tree, "")
+        return out
+
+    def is_hot(self, qualname: str) -> bool:
+        return qualname in self.decl.hot
+
+    def is_traced(self, qualname: str, node: ast.FunctionDef) -> bool:
+        if qualname in self.decl.traced:
+            return True
+        return self._jit_decorated(node)
+
+    def _jit_decorated(self, node: ast.FunctionDef) -> bool:
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = self.canon(target)
+            if name == "jax.jit":
+                return True
+            if name in ("functools.partial", "partial") and \
+                    isinstance(dec, ast.Call) and dec.args and \
+                    self.canon(dec.args[0]) == "jax.jit":
+                return True
+        return False
+
+    # -- jit registry --------------------------------------------------------
+
+    def _collect_jits(self, tree: ast.Module) -> Dict[str, JitDecl]:
+        jits: Dict[str, JitDecl] = {}
+        # simple name -> RHS map so donate_argnums=donate resolves when
+        # the tuple (often conditional on the backend) was bound earlier
+        bindings: Dict[str, ast.AST] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        bindings[t.id] = node.value
+        for node in ast.walk(tree):
+            call: Optional[ast.Call] = None
+            names: List[str] = []
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                call = node.value
+                names = [self.dotted(t) for t in node.targets]
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    tname = self.canon(target)
+                    if tname == "jax.jit" and isinstance(dec, ast.Call):
+                        call, names = dec, [node.name]
+                    elif tname in ("functools.partial", "partial") and \
+                            isinstance(dec, ast.Call) and dec.args and \
+                            self.canon(dec.args[0]) == "jax.jit":
+                        call, names = dec, [node.name]
+                    elif tname == "jax.jit":
+                        jits[node.name] = JitDecl(node.name, node.lineno)
+            if call is None or self.canon(call.func) not in (
+                    "jax.jit", "functools.partial", "partial"):
+                continue
+            if self.canon(call.func) in ("functools.partial", "partial") and \
+                    not (call.args and self.canon(call.args[0]) == "jax.jit"):
+                continue
+            has_static = False
+            donate: Tuple[int, ...] = ()
+            conditional = False
+            for kw in call.keywords:
+                if kw.arg in ("static_argnums", "static_argnames"):
+                    has_static = True
+                elif kw.arg == "donate_argnums":
+                    value = kw.value
+                    if isinstance(value, ast.Name) and \
+                            value.id in bindings:
+                        value = bindings[value.id]
+                    donate = _int_constants(value)
+                    conditional = not isinstance(value, (ast.Tuple,
+                                                         ast.Constant))
+            for name in names:
+                if name:
+                    jits[name] = JitDecl(name, node.lineno, has_static,
+                                         donate, conditional)
+        return jits
+
+    def line_at(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, symbol: str,
+                message: str) -> Finding:
+        return Finding(rule=rule, file=self.relpath,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0),
+                       symbol=symbol, message=message,
+                       snippet=self.line_at(getattr(node, "lineno", 1)))
+
+
+# -- taint inference ---------------------------------------------------------
+
+class TaintEnv:
+    """Statement-ordered expression-taint environment for one function.
+
+    Keys are ``ast.unparse`` strings of assignment targets (names and
+    ``self.x`` attribute chains).  There is no branch merging: bodies of
+    ``if``/``for`` are processed in textual order, which matches how the
+    hot paths are actually written (straight-line steady state) and
+    keeps every classification explainable from the source alone.
+    """
+
+    def __init__(self, ctx: ModuleContext):
+        self.ctx = ctx
+        self.env: Dict[str, str] = {}
+        self.versions: Dict[str, int] = {}
+
+    # taint lattice: DEVICE dominates (jax promotes mixed ops to device)
+    @staticmethod
+    def combine(*taints: str) -> str:
+        if DEVICE in taints:
+            return DEVICE
+        if all(t == HOST for t in taints) and taints:
+            return HOST
+        if HOST in taints and all(t in (HOST, UNKNOWN) for t in taints):
+            return UNKNOWN
+        return UNKNOWN if taints else HOST
+
+    def taint_of(self, node: ast.AST) -> str:
+        ctx = self.ctx
+        if isinstance(node, ast.Constant):
+            return HOST
+        if isinstance(node, (ast.List, ast.Tuple, ast.Set)):
+            # a literal container is host construction unless it holds
+            # a device value (then jax promotes the whole thing)
+            elts = [self.taint_of(e) for e in node.elts]
+            return DEVICE if DEVICE in elts else HOST
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            key = ast.unparse(node)
+            if key in self.env:
+                return self.env[key]
+            if any(key == p or key.startswith(p + "[")
+                   for p in ctx.decl.host_state):
+                return HOST
+            return UNKNOWN
+        if isinstance(node, ast.Subscript):
+            return self.taint_of(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.combine(self.taint_of(node.left),
+                                self.taint_of(node.right))
+        if isinstance(node, (ast.BoolOp,)):
+            return self.combine(*[self.taint_of(v) for v in node.values])
+        if isinstance(node, ast.UnaryOp):
+            return self.taint_of(node.operand)
+        if isinstance(node, ast.Compare):
+            return self.combine(self.taint_of(node.left),
+                                *[self.taint_of(c) for c in node.comparators])
+        if isinstance(node, ast.IfExp):
+            return self.combine(self.taint_of(node.body),
+                                self.taint_of(node.orelse))
+        if isinstance(node, ast.Call):
+            return self._call_taint(node)
+        if isinstance(node, ast.Starred):
+            return self.taint_of(node.value)
+        return UNKNOWN
+
+    def _call_taint(self, node: ast.Call) -> str:
+        ctx = self.ctx
+        name = ctx.canon(node.func)
+        raw = ctx.dotted(node.func)
+        if name.startswith(_DEVICE_ROOTS) or name == "jax.jit":
+            return DEVICE
+        if any(raw == p or raw.startswith(p + "(")
+               for p in ctx.manifest.device_producers):
+            return DEVICE
+        if raw in ctx.jits or (raw.split(".")[-1] in ctx.jits and "." not in raw):
+            return DEVICE
+        if name.startswith(_HOST_ROOTS):
+            return HOST
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in _HOST_BUILTINS:
+            return HOST
+        # method on a value keeps its residency: x.astype(...), x.at[i].set()
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr in ("item", "tolist"):
+                return HOST
+            return self.taint_of(node.func.value)
+        return UNKNOWN
+
+    # -- statement processing ------------------------------------------------
+
+    def assign(self, target: ast.AST, taint: str):
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self.assign(elt, taint)
+            return
+        if isinstance(target, ast.Starred):
+            target = target.value
+        if isinstance(target, (ast.Name, ast.Attribute)):
+            key = ast.unparse(target)
+            self.env[key] = taint
+            self.versions[key] = self.versions.get(key, 0) + 1
+        elif isinstance(target, ast.Subscript):
+            # x[i] = v leaves x's residency unchanged
+            pass
+
+    def process(self, stmt: ast.stmt):
+        """Update the environment for one statement (call this in
+        textual order; rules interleave their checks between calls)."""
+        if isinstance(stmt, ast.Assign):
+            value_taint = self.taint_of(stmt.value)
+            for target in stmt.targets:
+                if isinstance(target, (ast.Tuple, ast.List)) and \
+                        isinstance(stmt.value, ast.Tuple) and \
+                        len(target.elts) == len(stmt.value.elts):
+                    for t, v in zip(target.elts, stmt.value.elts):
+                        self.assign(t, self.taint_of(v))
+                else:
+                    self.assign(target, value_taint)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self.assign(stmt.target, self.taint_of(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            self.assign(stmt.target,
+                        self.combine(self.taint_of(stmt.target),
+                                     self.taint_of(stmt.value)))
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.assign(stmt.target, UNKNOWN)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                if item.optional_vars is not None:
+                    self.assign(item.optional_vars, UNKNOWN)
+
+
+def iter_statements(fn: ast.FunctionDef) -> Iterable[ast.stmt]:
+    """Every statement in the function in textual order, descending
+    into compound bodies but not into nested function definitions."""
+    def walk(body):
+        for stmt in body:
+            yield stmt
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                yield from walk(getattr(stmt, field, []) or [])
+            for handler in getattr(stmt, "handlers", []) or []:
+                yield from walk(handler.body)
+    yield from walk(fn.body)
+
+
+def statement_expressions(stmt: ast.stmt) -> Iterable[ast.AST]:
+    """All expression nodes inside one statement (not descending into
+    nested statements — those are visited by iter_statements)."""
+    compound = (ast.For, ast.AsyncFor, ast.While, ast.If, ast.With,
+                ast.Try, ast.FunctionDef, ast.AsyncFunctionDef,
+                ast.ClassDef)
+    if isinstance(stmt, compound):
+        # only the header expressions belong to this statement
+        headers = []
+        for attr in ("test", "iter", "target"):
+            sub = getattr(stmt, attr, None)
+            if sub is not None:
+                headers.append(sub)
+        for item in getattr(stmt, "items", []) or []:
+            headers.append(item.context_expr)
+        for h in headers:
+            yield from ast.walk(h)
+        return
+    yield from ast.walk(stmt)
+
+
+# -- driver ------------------------------------------------------------------
+
+def iter_source_files(root: Path, scan_paths: Iterable[str]):
+    for rel in scan_paths:
+        base = root / rel
+        if base.is_file():
+            yield base
+            continue
+        for path in sorted(base.rglob("*.py")):
+            if "__pycache__" in path.parts:
+                continue
+            yield path
+
+
+def analyze_source(source: str, relpath: str, manifest: Manifest,
+                   path: Optional[Path] = None,
+                   rules: Optional[Iterable] = None) -> AnalysisResult:
+    """Analyze one in-memory source blob (the unit the fixture tests
+    drive)."""
+    from repro.analysis.rules import RULES
+    tree = ast.parse(source, filename=relpath)
+    ctx = ModuleContext(path or Path(relpath), relpath, source, tree,
+                        manifest)
+    per_line, file_wide = parse_suppressions(source)
+    findings: List[Finding] = []
+    suppressed = 0
+    for rule in (rules if rules is not None else RULES):
+        for finding in rule.check(ctx):
+            if is_suppressed(finding, per_line, file_wide):
+                suppressed += 1
+            else:
+                findings.append(finding)
+    findings.sort(key=Finding.sort_key)
+    return AnalysisResult(findings=findings, files_scanned=1,
+                          suppressed=suppressed)
+
+
+def analyze_paths(root: Path, manifest: Manifest,
+                  rules: Optional[Iterable] = None) -> AnalysisResult:
+    """Analyze every file under the manifest's scan roots."""
+    findings: List[Finding] = []
+    suppressed = 0
+    count = 0
+    for path in iter_source_files(root, manifest.scan_paths):
+        relpath = path.relative_to(root).as_posix()
+        try:
+            source = path.read_text()
+        except (OSError, UnicodeDecodeError):
+            continue
+        try:
+            result = analyze_source(source, relpath, manifest, path, rules)
+        except SyntaxError as e:
+            findings.append(Finding(
+                rule="RL000", file=relpath, line=e.lineno or 1, col=0,
+                symbol="<module>", message=f"syntax error: {e.msg}"))
+            count += 1
+            continue
+        findings.extend(result.findings)
+        suppressed += result.suppressed
+        count += 1
+    findings.sort(key=Finding.sort_key)
+    return AnalysisResult(findings=findings, files_scanned=count,
+                          suppressed=suppressed)

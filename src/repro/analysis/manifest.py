@@ -1,0 +1,159 @@
+"""Hot-path manifest: which functions the serving tick actually runs.
+
+``hotpaths.toml`` (checked in next to this module) declares, per
+module, the *hot* functions (steady-state per-tick work — RL001 flags
+implicit transfers only there), the *traced* functions (bodies that run
+under ``jax.jit`` — RL005 forbids host side effects in them), and
+*host_state* attribute patterns (names like ``self.page_table`` that
+are host mirrors by contract, so uploading them from a hot path is a
+churn hazard).  Global sections name *device_producers* (call patterns
+whose results live on device, e.g. ``self._fused_fn``) and the default
+*scan* roots.
+
+Parsing prefers the stdlib ``tomllib`` (Python 3.11+, what CI runs) and
+falls back to a built-in parser covering the subset this manifest uses
+(tables, arrays of tables, string and string-list values) — the
+analyzer must work on a bare Python with no third-party installs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleDecl:
+    """Per-file analysis scope from one ``[[module]]`` manifest block."""
+    file: str                          # repo-relative posix path
+    hot: Tuple[str, ...] = ()          # qualnames: "Class.method" | "func"
+    traced: Tuple[str, ...] = ()       # qualnames traced under jit
+    host_state: Tuple[str, ...] = ()   # attr chains that are host mirrors
+
+
+@dataclasses.dataclass(frozen=True)
+class Manifest:
+    """Parsed hot-path manifest (see module docstring)."""
+    modules: Dict[str, ModuleDecl]
+    device_producers: Tuple[str, ...] = ()
+    scan_paths: Tuple[str, ...] = ("src/repro",)
+    path: Optional[Path] = None
+
+    def decl(self, relpath: str) -> ModuleDecl:
+        """The declaration for ``relpath`` (empty scope when absent)."""
+        return self.modules.get(relpath, ModuleDecl(file=relpath))
+
+
+def default_manifest_path() -> Path:
+    return Path(__file__).resolve().parent / "hotpaths.toml"
+
+
+# -- TOML subset fallback ----------------------------------------------------
+
+_KEY_RE = re.compile(r"^([A-Za-z0-9_-]+)\s*=\s*(.*)$")
+
+
+def _strip_comment(line: str) -> str:
+    """Drop a trailing comment (this manifest never puts '#' in strings
+    outside of suppression examples, which live in docs, not here)."""
+    out = []
+    in_str = False
+    for ch in line:
+        if ch == '"':
+            in_str = not in_str
+        if ch == "#" and not in_str:
+            break
+        out.append(ch)
+    return "".join(out).strip()
+
+
+def _parse_value(text: str, lines, i: int):
+    """Parse a string or (possibly multi-line) string array value.
+    Returns (value, next_line_index)."""
+    text = text.strip()
+    if text.startswith('"'):
+        return text.strip('"'), i
+    if not text.startswith("["):
+        raise ValueError(f"unsupported TOML value: {text!r}")
+    buf = text
+    while "]" not in buf:
+        i += 1
+        if i >= len(lines):
+            raise ValueError("unterminated TOML array")
+        buf += " " + _strip_comment(lines[i])
+    inner = buf[buf.index("[") + 1:buf.rindex("]")]
+    items = [s.strip().strip('"') for s in inner.split(",")]
+    return [s for s in items if s], i
+
+
+def parse_toml_subset(text: str) -> Dict[str, object]:
+    """Parse the manifest's TOML subset into the same shape tomllib
+    produces: ``[[name]]`` accumulates a list of dicts, ``[name]`` a
+    dict, root keys go to the top level."""
+    root: Dict[str, object] = {}
+    current: Dict[str, object] = root
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = _strip_comment(lines[i])
+        if not line:
+            i += 1
+            continue
+        if line.startswith("[["):
+            name = line.strip("[]").strip()
+            current = {}
+            root.setdefault(name, [])
+            root[name].append(current)          # type: ignore[union-attr]
+        elif line.startswith("["):
+            name = line.strip("[]").strip()
+            current = {}
+            root[name] = current
+        else:
+            m = _KEY_RE.match(line)
+            if not m:
+                raise ValueError(f"unparseable manifest line: {line!r}")
+            value, i = _parse_value(m.group(2), lines, i)
+            current[m.group(1)] = value
+        i += 1
+    return root
+
+
+def _load_toml(path: Path) -> Dict[str, object]:
+    try:
+        import tomllib                           # Python 3.11+
+    except ModuleNotFoundError:
+        try:
+            import tomli as tomllib              # type: ignore[no-redef]
+        except ModuleNotFoundError:
+            return parse_toml_subset(path.read_text())
+    with open(path, "rb") as f:
+        return tomllib.load(f)
+
+
+def load_manifest(path: Optional[Path] = None) -> Manifest:
+    """Load ``hotpaths.toml`` (the checked-in default when ``path`` is
+    None).
+
+    Raises:
+      FileNotFoundError: the manifest file does not exist.
+      ValueError: a ``[[module]]`` block is missing its ``file`` key.
+    """
+    path = Path(path) if path is not None else default_manifest_path()
+    data = _load_toml(path)
+    modules: Dict[str, ModuleDecl] = {}
+    for block in data.get("module", []):         # type: ignore[union-attr]
+        file = block.get("file")
+        if not file:
+            raise ValueError(f"{path}: [[module]] block without a 'file' key")
+        modules[file] = ModuleDecl(
+            file=file,
+            hot=tuple(block.get("hot", [])),
+            traced=tuple(block.get("traced", [])),
+            host_state=tuple(block.get("host_state", [])),
+        )
+    producers: List[str] = list(
+        data.get("device_producers", {}).get("patterns", []))
+    scan: List[str] = list(data.get("scan", {}).get("paths", ["src/repro"]))
+    return Manifest(modules=modules, device_producers=tuple(producers),
+                    scan_paths=tuple(scan), path=path)

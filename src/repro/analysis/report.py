@@ -1,0 +1,116 @@
+"""Reporters: text (humans), json (tooling), github (CI annotations).
+
+Every format keys findings ``file:line RLxxx`` so a report line, a
+baseline entry, and a suppression comment all talk about the same
+thing.  The github format emits workflow commands
+(``::error file=...``) that the Actions runner turns into PR
+annotations, and appends a summary table to ``$GITHUB_STEP_SUMMARY``
+when that file is available.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional, TextIO
+
+from repro.analysis.engine import AnalysisResult, Finding
+
+
+def format_text(new: List[Finding], baselined: List[Finding],
+                result: AnalysisResult) -> str:
+    lines: List[str] = []
+    for f in new:
+        lines.append(f"{f.file}:{f.line} {f.rule} [{f.symbol}] "
+                     f"{f.message}")
+    lines.append(
+        f"repro-lint: {len(new)} finding(s) "
+        f"({len(baselined)} baselined, {result.suppressed} suppressed) "
+        f"across {result.files_scanned} file(s)")
+    return "\n".join(lines)
+
+
+def format_json(new: List[Finding], baselined: List[Finding],
+                result: AnalysisResult) -> str:
+    def encode(f: Finding, is_baselined: bool):
+        return {
+            "rule": f.rule, "file": f.file, "line": f.line,
+            "col": f.col, "symbol": f.symbol, "message": f.message,
+            "snippet": f.snippet, "baselined": is_baselined,
+        }
+    doc = {
+        "findings": ([encode(f, False) for f in new] +
+                     [encode(f, True) for f in baselined]),
+        "new": len(new),
+        "baselined": len(baselined),
+        "suppressed": result.suppressed,
+        "files_scanned": result.files_scanned,
+    }
+    return json.dumps(doc, indent=2)
+
+
+def _escape_gh(text: str) -> str:
+    """Workflow-command data escaping per the Actions runner rules."""
+    return (text.replace("%", "%25").replace("\r", "%0D")
+            .replace("\n", "%0A"))
+
+
+def format_github(new: List[Finding], baselined: List[Finding],
+                  result: AnalysisResult) -> str:
+    lines: List[str] = []
+    for f in new:
+        lines.append(
+            f"::error file={f.file},line={f.line},"
+            f"col={f.col + 1},title=repro-lint {f.rule}::"
+            f"{_escape_gh(f.message)}")
+    for f in baselined:
+        lines.append(
+            f"::notice file={f.file},line={f.line},"
+            f"col={f.col + 1},title=repro-lint {f.rule} (baselined)::"
+            f"{_escape_gh(f.message)}")
+    lines.append(
+        f"repro-lint: {len(new)} new finding(s), "
+        f"{len(baselined)} baselined, {result.suppressed} suppressed")
+    return "\n".join(lines)
+
+
+def step_summary(new: List[Finding], baselined: List[Finding],
+                 result: AnalysisResult) -> str:
+    """Markdown for $GITHUB_STEP_SUMMARY: the ratchet at a glance."""
+    lines = ["### repro-lint", ""]
+    lines.append(f"| new findings | baselined | suppressed inline "
+                 f"| files scanned |")
+    lines.append("|---|---|---|---|")
+    lines.append(f"| **{len(new)}** | {len(baselined)} "
+                 f"| {result.suppressed} | {result.files_scanned} |")
+    if new:
+        lines += ["", "| finding | symbol | message |", "|---|---|---|"]
+        for f in new[:50]:
+            msg = f.message if len(f.message) <= 120 else \
+                f.message[:117] + "..."
+            lines.append(f"| `{f.file}:{f.line}` {f.rule} "
+                         f"| `{f.symbol}` | {msg} |")
+    lines.append("")
+    lines.append(f"baseline count: **{len(baselined)}** — this number "
+                 f"only ratchets down (fix, then `--write-baseline`).")
+    return "\n".join(lines)
+
+
+def emit(fmt: str, new: List[Finding], baselined: List[Finding],
+         result: AnalysisResult, out: TextIO,
+         summary_path: Optional[str] = None) -> None:
+    """Write the report; for github also append the step summary.
+
+    Raises:
+      ValueError: unknown format name.
+    """
+    formats = {"text": format_text, "json": format_json,
+               "github": format_github}
+    if fmt not in formats:
+        raise ValueError(f"unknown format {fmt!r} "
+                         f"(choose from {sorted(formats)})")
+    print(formats[fmt](new, baselined, result), file=out)
+    if fmt == "github":
+        path = summary_path or os.environ.get("GITHUB_STEP_SUMMARY")
+        if path:
+            with open(path, "a") as f:
+                f.write(step_summary(new, baselined, result) + "\n")

@@ -1,0 +1,548 @@
+"""The repro-lint rules: RL001-RL006.
+
+Each rule is a pure function ``ModuleContext -> [Finding]`` wrapped in
+a :class:`Rule` record carrying its catalog metadata.  The rules encode
+hazards this repo has actually shipped and then fixed by hand (see
+docs/static_analysis.md for the incident behind each one):
+
+RL001  implicit host<->device transfer in a declared hot-path function
+RL002  retrace hazard: Python scalars into a jit without static_*
+RL003  donated buffer referenced after the donating call
+RL004  PRNG key consumed twice without split/fold_in
+RL005  host side effects inside a traced function
+RL006  structural ops on float8 arrays (must travel as uint8 bits)
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from repro.analysis.engine import (
+    DEVICE, HOST, UNKNOWN, Finding, ModuleContext, TaintEnv,
+    iter_statements, statement_expressions,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    brief: str
+    check: Callable[[ModuleContext], List[Finding]]
+
+
+# -- RL001: implicit transfers in hot paths ----------------------------------
+
+_D2H_CALLS = ("numpy.asarray", "numpy.array", "numpy.copy")
+_H2D_CALLS = ("jax.numpy.asarray", "jax.numpy.array", "jax.device_put")
+_SYNC_BUILTINS = ("int", "float", "bool")
+
+
+def _check_rl001(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for qual, fn in ctx.functions:
+        if not ctx.is_hot(qual):
+            continue
+        env = TaintEnv(ctx)
+        for stmt in iter_statements(fn):
+            for node in statement_expressions(stmt):
+                if isinstance(node, ast.Call):
+                    _rl001_call(ctx, env, qual, node, findings)
+            if isinstance(stmt, (ast.For, ast.AsyncFor)) and \
+                    env.taint_of(stmt.iter) == DEVICE:
+                findings.append(ctx.finding(
+                    "RL001", stmt.iter, qual,
+                    f"iterating over device array "
+                    f"`{ast.unparse(stmt.iter)}` pulls it to host "
+                    f"element by element — pull once with a batched "
+                    f"np.asarray, or keep the loop on device"))
+            env.process(stmt)
+    return findings
+
+
+def _rl001_call(ctx: ModuleContext, env: TaintEnv, qual: str,
+                node: ast.Call, findings: List[Finding]):
+    name = ctx.canon(node.func)
+    arg = node.args[0] if node.args else None
+    if name in _D2H_CALLS and arg is not None:
+        taint = env.taint_of(arg)
+        src = ast.unparse(arg)
+        if taint == DEVICE:
+            findings.append(ctx.finding(
+                "RL001", node, qual,
+                f"implicit device->host transfer: np.asarray on device "
+                f"value `{src}` in hot path — every call blocks on the "
+                f"device; batch transfers or keep the value on device"))
+        elif taint == UNKNOWN:
+            findings.append(ctx.finding(
+                "RL001", node, qual,
+                f"possible device->host transfer: np.asarray on "
+                f"`{src}` whose residency this hot path cannot prove "
+                f"is host — if it is a jax array this blocks every "
+                f"call (reduce on device, pull only the result)"))
+    elif name in _H2D_CALLS and arg is not None:
+        if env.taint_of(arg) == HOST:
+            findings.append(ctx.finding(
+                "RL001", node, qual,
+                f"per-call host->device upload "
+                f"`{ast.unparse(node)}` in hot path — hoist the "
+                f"upload out of the steady state or cache the device "
+                f"copy and re-upload only when it changes"))
+    elif isinstance(node.func, ast.Name) and \
+            node.func.id in _SYNC_BUILTINS and arg is not None:
+        if env.taint_of(arg) == DEVICE:
+            findings.append(ctx.finding(
+                "RL001", node, qual,
+                f"`{node.func.id}()` on device value "
+                f"`{ast.unparse(arg)}` forces a blocking device->host "
+                f"sync in hot path — keep the scalar on device or "
+                f"batch the pull"))
+    elif isinstance(node.func, ast.Attribute) and \
+            node.func.attr in ("item", "tolist") and not node.args:
+        taint = env.taint_of(node.func.value)
+        if taint in (DEVICE, UNKNOWN):
+            sev = ("" if taint == DEVICE else "possible ")
+            findings.append(ctx.finding(
+                "RL001", node, qual,
+                f"{sev}device->host sync: `.{node.func.attr}()` on "
+                f"`{ast.unparse(node.func.value)}` in hot path — each "
+                f"call is a blocking transfer"))
+
+
+# -- RL002: retrace hazards at jit call sites --------------------------------
+
+def _is_scalar_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float, bool))
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return _is_scalar_literal(node.operand)
+    return False
+
+
+def _is_shape_dependent(ctx: ModuleContext, node: ast.AST) -> bool:
+    """Expressions whose value changes with data shape: ``x.shape[i]``,
+    ``len(x)``, ``int(...)`` — passing them as traced args retraces on
+    every distinct value."""
+    if isinstance(node, ast.Subscript) and \
+            isinstance(node.value, ast.Attribute) and \
+            node.value.attr == "shape":
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) and \
+            node.func.id in ("int", "len"):
+        return True
+    return False
+
+
+def _check_rl002(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for qual, fn in ctx.functions:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            raw = ctx.dotted(node.func)
+            decl = ctx.jits.get(raw)
+            if decl is None or decl.has_static:
+                continue
+            if raw in ("jax.jit", "partial"):
+                continue
+            for i, arg in enumerate(list(node.args) +
+                                    [k.value for k in node.keywords]):
+                if _is_scalar_literal(arg):
+                    findings.append(ctx.finding(
+                        "RL002", arg, qual,
+                        f"Python scalar `{ast.unparse(arg)}` passed to "
+                        f"jitted `{raw}` (arg {i}) with no "
+                        f"static_argnums/static_argnames — every "
+                        f"distinct value triggers a retrace; pass a "
+                        f"device array pinned to a fixed shape, or "
+                        f"declare the arg static"))
+                elif _is_shape_dependent(ctx, arg):
+                    findings.append(ctx.finding(
+                        "RL002", arg, qual,
+                        f"data-dependent value `{ast.unparse(arg)}` "
+                        f"passed to jitted `{raw}` (arg {i}) with no "
+                        f"static_argnums/static_argnames — shape churn "
+                        f"retraces on every new value; pad to a fixed "
+                        f"shape (the (max_seats,) pin) or declare it "
+                        f"static"))
+    return findings
+
+
+# -- RL003: donation-after-use -----------------------------------------------
+
+def _stores_in(stmt: ast.stmt) -> Set[str]:
+    out: Set[str] = set()
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        targets = [stmt.target]
+    for t in targets:
+        for sub in ast.walk(t):
+            if isinstance(sub, (ast.Name, ast.Attribute)):
+                out.add(ast.unparse(sub))
+    return out
+
+
+def _loads_in(stmt: ast.stmt, key: str) -> List[ast.AST]:
+    skip: Set[int] = set()
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            for sub in ast.walk(t):
+                skip.add(id(sub))
+    elif isinstance(stmt, ast.AnnAssign):
+        for sub in ast.walk(stmt.target):
+            skip.add(id(sub))
+    out = []
+    for node in statement_expressions(stmt):
+        if id(node) in skip:
+            continue
+        if isinstance(node, (ast.Name, ast.Attribute)) and \
+                ast.unparse(node) == key:
+            out.append(node)
+    return out
+
+
+def _check_rl003(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for qual, fn in ctx.functions:
+        stmts = list(iter_statements(fn))
+        for idx, stmt in enumerate(stmts):
+            for node in statement_expressions(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                decl = ctx.jits.get(ctx.dotted(node.func))
+                if decl is None or not decl.donate:
+                    continue
+                donated = []
+                for pos in decl.donate:
+                    if pos < len(node.args):
+                        key = ast.unparse(node.args[pos])
+                        if isinstance(node.args[pos],
+                                      (ast.Name, ast.Attribute)):
+                            donated.append((pos, key))
+                if not donated:
+                    continue
+                # stores on the call's own statement (unpack targets)
+                # land after the call returns, so they re-bind safely
+                live = {key: pos for pos, key in donated
+                        if key not in _stores_in(stmt)}
+                for later in stmts[idx + 1:]:
+                    if not live:
+                        break
+                    for key in list(live):
+                        loads = _loads_in(later, key)
+                        if loads:
+                            findings.append(ctx.finding(
+                                "RL003", loads[0], qual,
+                                f"`{key}` was donated to jitted "
+                                f"`{ctx.dotted(node.func)}` (arg "
+                                f"{live[key]}, donate_argnums) at line "
+                                f"{stmt.lineno} and is read here — the "
+                                f"buffer may already be reused; rebind "
+                                f"the name from the call's result "
+                                f"before any further use"))
+                            del live[key]
+                    for key in _stores_in(later):
+                        live.pop(key, None)
+    return findings
+
+
+# -- RL004: PRNG key reuse ---------------------------------------------------
+
+_KEY_PRODUCERS = ("jax.random.PRNGKey", "jax.random.key",
+                  "jax.random.fold_in", "jax.random.split",
+                  "jax.random.clone")
+_KEY_SAFE_CONSUMERS = {"split", "fold_in", "PRNGKey", "key", "clone",
+                       "wrap_key_data", "key_data"}
+_KEY_PARAM_NAMES = {"key", "rng", "rng_key", "prng_key"}
+
+
+def _check_rl004(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for qual, fn in ctx.functions:
+        tracked: Set[str] = set()
+        uses: Dict[str, List[Tuple[int, str]]] = {}
+        for a in list(fn.args.args) + list(fn.args.kwonlyargs):
+            if a.arg in _KEY_PARAM_NAMES:
+                tracked.add(a.arg)
+        for stmt in iter_statements(fn):
+            # consumers first: the RHS runs before the LHS rebinds
+            for node in statement_expressions(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = ctx.canon(node.func)
+                if not name.startswith("jax.random."):
+                    continue
+                if name.rsplit(".", 1)[-1] in _KEY_SAFE_CONSUMERS:
+                    continue
+                for arg in list(node.args) + \
+                        [k.value for k in node.keywords]:
+                    expr = ast.unparse(arg) if isinstance(
+                        arg, (ast.Name, ast.Attribute, ast.Subscript)) \
+                        else ""
+                    base = expr.split("[")[0].split(".")[0]
+                    if not expr or base not in tracked:
+                        continue
+                    history = uses.setdefault(expr, [])
+                    if history:
+                        first_line, first_fn = history[0]
+                        findings.append(ctx.finding(
+                            "RL004", arg, qual,
+                            f"PRNG key `{expr}` consumed by "
+                            f"`{name}` but already consumed by "
+                            f"`{first_fn}` at line {first_line} — "
+                            f"reusing a key correlates the streams; "
+                            f"jax.random.split it, or fold_in a "
+                            f"distinct stream id per consumer (the "
+                            f"sampler's (seed, rid, step) discipline)"))
+                    history.append((node.lineno, name))
+            # rebinding a tracked name starts a fresh key lineage
+            rebound: Set[str] = set()
+            if isinstance(stmt, ast.Assign):
+                value_is_key = isinstance(stmt.value, ast.Call) and \
+                    ctx.canon(stmt.value.func) in _KEY_PRODUCERS
+                for t in stmt.targets:
+                    elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) \
+                        else [t]
+                    for elt in elts:
+                        if isinstance(elt, ast.Name):
+                            rebound.add(elt.id)
+                            if value_is_key:
+                                tracked.add(elt.id)
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                elts = stmt.target.elts if isinstance(
+                    stmt.target, (ast.Tuple, ast.List)) else [stmt.target]
+                for elt in elts:
+                    if isinstance(elt, ast.Name):
+                        rebound.add(elt.id)
+                        if isinstance(stmt.iter, ast.Call) and \
+                                ctx.canon(stmt.iter.func) in _KEY_PRODUCERS:
+                            tracked.add(elt.id)
+            for name in rebound:
+                for expr in list(uses):
+                    if expr == name or expr.startswith((f"{name}[",
+                                                        f"{name}.")):
+                        del uses[expr]
+    return findings
+
+
+# -- RL005: host side effects under trace ------------------------------------
+
+_EFFECT_CALLS = {
+    "print": "jax.debug.print (formats on host without breaking the "
+             "trace)",
+    "input": "nothing — traced functions cannot block on host input",
+    "breakpoint": "jax.debug.breakpoint",
+    "open": "jax.debug.callback / io_callback for host I/O",
+    "time.time": "jax.debug.callback, or time outside the jit boundary",
+    "time.perf_counter": "jax.debug.callback, or time outside the jit "
+                         "boundary",
+    "time.monotonic": "jax.debug.callback, or time outside the jit "
+                      "boundary",
+}
+
+
+def _check_rl005(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for qual, fn in ctx.functions:
+        if not ctx.is_traced(qual, fn):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = ctx.canon(node.func)
+            suggestion = _EFFECT_CALLS.get(name)
+            if suggestion is None and name.startswith("logging."):
+                suggestion = "jax.debug.print"
+            if suggestion is None:
+                continue
+            findings.append(ctx.finding(
+                "RL005", node, qual,
+                f"`{name}` inside jit-traced `{qual}` runs once at "
+                f"trace time, then never again (or forces a host "
+                f"callback) — use {suggestion}"))
+    return findings
+
+
+# -- RL006: structural ops on float8 -----------------------------------------
+
+_STRUCTURAL_CALLS = (
+    "jax.numpy.take", "jax.numpy.take_along_axis",
+    "jax.numpy.concatenate", "jax.numpy.pad", "jax.numpy.roll",
+    "jax.numpy.stack", "jax.lax.gather", "jax.lax.scatter",
+    "jax.lax.dynamic_slice", "jax.lax.dynamic_update_slice",
+    "jax.lax.dynamic_index_in_dim", "jax.lax.dynamic_slice_in_dim",
+)
+_AT_METHODS = ("set", "add", "max", "min", "mul", "get")
+
+
+def _static_index(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return _static_index(node.operand)
+    if isinstance(node, ast.Slice):
+        return all(p is None or _static_index(p)
+                   for p in (node.lower, node.upper, node.step))
+    if isinstance(node, ast.Tuple):
+        return all(_static_index(e) for e in node.elts)
+    return False
+
+
+class _Fp8Env:
+    """Tracks which expressions currently hold float8-typed arrays."""
+
+    def __init__(self, ctx: ModuleContext):
+        self.ctx = ctx
+        self.fp8: Set[str] = set()
+
+    def is_fp8(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Call):
+            func = node.func
+            if isinstance(func, ast.Attribute) and func.attr == "astype":
+                if node.args and "float8" in ast.unparse(node.args[0]):
+                    return True
+                return False          # astype to a wider dtype clears fp8
+            name = self.ctx.canon(func)
+            if name == "jax.lax.bitcast_convert_type":
+                args = list(node.args) + [k.value for k in node.keywords]
+                return any("float8" in ast.unparse(a) for a in args[1:])
+            if name.startswith(("jax.numpy.", "jax.lax.")) and \
+                    "float8" in ast.unparse(node):
+                return True           # jnp.zeros(..., dtype=f8) etc.
+            if isinstance(func, ast.Attribute):
+                # x.at[i].set(v), x.reshape(...) keep x's dtype
+                return self.is_fp8(func.value)
+            return False
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            return ast.unparse(node) in self.fp8
+        if isinstance(node, ast.Subscript):
+            return self.is_fp8(node.value)
+        if isinstance(node, ast.IfExp):
+            return self.is_fp8(node.body) or self.is_fp8(node.orelse)
+        return False
+
+    def process(self, stmt: ast.stmt):
+        if isinstance(stmt, ast.Assign):
+            fp8 = self.is_fp8(stmt.value)
+            for t in stmt.targets:
+                elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) \
+                    else [t]
+                for elt in elts:
+                    if isinstance(elt, (ast.Name, ast.Attribute)):
+                        key = ast.unparse(elt)
+                        (self.fp8.add if fp8 else
+                         self.fp8.discard)(key)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            if isinstance(stmt.target, (ast.Name, ast.Attribute)):
+                key = ast.unparse(stmt.target)
+                (self.fp8.add if self.is_fp8(stmt.value) else
+                 self.fp8.discard)(key)
+
+
+_RL006_FIX = ("float8 must travel as uint8 bit patterns through "
+              "structural ops: bitcast_convert_type to uint8, run the "
+              "op, bitcast back (XLA CPU otherwise legalizes it "
+              "through a whole-array f16 round trip)")
+
+
+def _check_rl006(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for qual, fn in ctx.functions:
+        env = _Fp8Env(ctx)
+        for stmt in iter_statements(fn):
+            for node in statement_expressions(stmt):
+                if isinstance(node, ast.Subscript) and \
+                        isinstance(node.ctx, ast.Load) and \
+                        env.is_fp8(node.value) and \
+                        not _static_index(node.slice):
+                    if isinstance(node.value, ast.Attribute) and \
+                            node.value.attr == "at":
+                        continue      # handled as scatter below
+                    findings.append(ctx.finding(
+                        "RL006", node, qual,
+                        f"dynamic gather "
+                        f"`{ast.unparse(node)}` on a float8 array — "
+                        f"{_RL006_FIX}"))
+                elif isinstance(node, ast.Call):
+                    _rl006_call(ctx, env, qual, node, findings)
+            env.process(stmt)
+    return findings
+
+
+def _rl006_call(ctx: ModuleContext, env: _Fp8Env, qual: str,
+                node: ast.Call, findings: List[Finding]):
+    name = ctx.canon(node.func)
+    if name in _STRUCTURAL_CALLS:
+        args = list(node.args) + [k.value for k in node.keywords]
+        if any(env.is_fp8(a) for a in args):
+            findings.append(ctx.finding(
+                "RL006", node, qual,
+                f"`{name}` on a float8 array — {_RL006_FIX}"))
+        return
+    if name == "jax.lax.scan":
+        # carry (2nd positional arg) slicing runs a structural op per step
+        if len(node.args) >= 2 and env.is_fp8(node.args[1]):
+            findings.append(ctx.finding(
+                "RL006", node, qual,
+                f"float8 array in a jax.lax.scan carry — each step "
+                f"slices the carry structurally; {_RL006_FIX}"))
+        return
+    func = node.func
+    if isinstance(func, ast.Attribute) and func.attr in _AT_METHODS and \
+            isinstance(func.value, ast.Subscript) and \
+            isinstance(func.value.value, ast.Attribute) and \
+            func.value.value.attr == "at":
+        base = func.value.value.value
+        if env.is_fp8(base) and not _static_index(func.value.slice):
+            findings.append(ctx.finding(
+                "RL006", node, qual,
+                f"dynamic scatter `.at[...].{func.attr}` on float8 "
+                f"array `{ast.unparse(base)}` — {_RL006_FIX}"))
+
+
+# -- registry ----------------------------------------------------------------
+
+RULES: Tuple[Rule, ...] = (
+    Rule("RL001", "implicit transfer in hot path",
+         "device->host sync (np.asarray/int()/.item()/iteration) or "
+         "per-call host->device upload inside a manifest-declared hot "
+         "function", _check_rl001),
+    Rule("RL002", "retrace hazard at jit boundary",
+         "Python scalar or data-dependent shape passed to a jitted "
+         "callable with no static_argnums/static_argnames", _check_rl002),
+    Rule("RL003", "donated buffer used after call",
+         "a buffer named in donate_argnums is read after the donating "
+         "call without being rebound", _check_rl003),
+    Rule("RL004", "PRNG key reuse",
+         "the same key expression flows into two jax.random consumers "
+         "without a split/fold_in between", _check_rl004),
+    Rule("RL005", "host side effect under trace",
+         "print/open/clock inside a jit-traced function (use "
+         "jax.debug.print / callbacks)", _check_rl005),
+    Rule("RL006", "structural op on float8",
+         "gather/scatter/concat/scan-carry on a float8 array that must "
+         "travel as uint8 bit patterns", _check_rl006),
+)
+
+
+def rule_ids() -> Tuple[str, ...]:
+    return tuple(r.id for r in RULES)
+
+
+def get_rules(only: Optional[Set[str]] = None) -> Tuple[Rule, ...]:
+    """The rule set, optionally filtered to ``only`` ids.
+
+    Raises:
+      ValueError: ``only`` names an unknown rule id.
+    """
+    if only is None:
+        return RULES
+    unknown = only - set(rule_ids())
+    if unknown:
+        raise ValueError(f"unknown rule ids: {sorted(unknown)}")
+    return tuple(r for r in RULES if r.id in only)

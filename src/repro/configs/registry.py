@@ -124,5 +124,8 @@ def make_example_batch(cfg: ModelConfig, shape_kind: str, batch: int, seq: int,
     if cfg.frontend == "vision":
         out["patches"] = jax.random.normal(k3, (batch, cfg.frontend_len, cfg.frontend_dim))
     if cfg.frontend == "audio":
-        out["audio"] = jax.random.normal(k3, (batch, cfg.encoder_len, cfg.frontend_dim))
+        # distinct stream from the vision patches (k3 must not be
+        # consumed twice; fold_in keeps k1-k3 streams unchanged)
+        k4 = jax.random.fold_in(k3, 1)
+        out["audio"] = jax.random.normal(k4, (batch, cfg.encoder_len, cfg.frontend_dim))
     return out

@@ -213,7 +213,10 @@ class Sampler:
           The drawn token id in ``[0, V)``; identical for identical
           ``(logits, params.seed, rid, step)`` regardless of batch
           composition, scheduling order, or the request's SLO class."""
-        x = np.asarray(logits, np.float32).reshape(-1)
+        # host oracle by contract: callers hand over rows they already
+        # batch-transferred (see Scheduler._sample_decode_batch)
+        x = np.asarray(  # repro-lint: disable=RL001
+            logits, np.float32).reshape(-1)
         if params is None or params.greedy:
             return int(np.argmax(x))
         x = x / np.float32(params.temperature)
