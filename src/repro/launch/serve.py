@@ -202,6 +202,7 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
                 lazy_pages: bool = True, watermark: float = 0.05,
                 priority: str = "standard",
                 deadline_ms: Optional[float] = None,
+                tbt_deadline_ms: Optional[float] = None,
                 admission: str = "fcfs", aging_ticks: int = 64,
                 kv_dtype: Optional[str] = None,
                 class_precision: Optional[Dict[str, str]] = None):
@@ -256,7 +257,8 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
         eng.submit(rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
                    max_new_tokens=int(rng.integers(2, gen + 1)),
                    eos_id=eos_id, sampling=sampling,
-                   priority=priority, deadline_ms=deadline_ms)
+                   priority=priority, deadline_ms=deadline_ms,
+                   tbt_deadline_ms=tbt_deadline_ms)
     done = eng.run()
     return {"finished": done, "metrics": eng.metrics.snapshot()}
 
@@ -273,6 +275,7 @@ def serve_fleet(models, *, requests: int = 12, gen: int = 8,
                 lazy_pages: bool = True, watermark: float = 0.05,
                 priority: str = "standard",
                 deadline_ms: Optional[float] = None,
+                tbt_deadline_ms: Optional[float] = None,
                 admission: str = "fcfs", aging_ticks: int = 64,
                 selection: str = "least-loaded",
                 kv_dtype: Optional[str] = None,
@@ -344,7 +347,8 @@ def serve_fleet(models, *, requests: int = 12, gen: int = 8,
                                          plen).astype(np.int32),
                      max_new_tokens=int(rng.integers(2, gen + 1)),
                      eos_id=eos_id, sampling=sampling,
-                     priority=priority, deadline_ms=deadline_ms)
+                     priority=priority, deadline_ms=deadline_ms,
+                     tbt_deadline_ms=tbt_deadline_ms)
     done = fleet.run()
     return {"finished": done, "metrics": fleet.metrics_snapshot()}
 
@@ -367,6 +371,13 @@ def add_slo_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--priority", choices=("premium", "standard", "batch"),
                     default="standard",
                     help="SLO class applied to every submitted request")
+    ap.add_argument("--tbt-deadline-ms", type=float, default=None,
+                    help="per-decode-token deadline in ms: tightens EDF "
+                         "rank to the next-token due time under "
+                         "--admission slo, shields the request from "
+                         "preemption within its class, and lands "
+                         "tbt_p95_s / tbt_miss_rate in the metrics "
+                         "snapshot")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="TTFT deadline per request in ms (EDF ordering "
                          "under --admission slo; misses are counted and "
@@ -459,9 +470,12 @@ def main():
                     help="fleet spec: comma-separated "
                          "name[:replicas[:kv_dtype]], e.g. "
                          "llama3-8b:2:fp8,qwen3-1.7b (--fleet mode)")
-    ap.add_argument("--selection", choices=("least-loaded", "round-robin"),
+    ap.add_argument("--selection",
+                    choices=("least-loaded", "round-robin", "slo-aware"),
                     default="least-loaded",
-                    help="replica selection policy (--fleet mode)")
+                    help="replica selection policy (--fleet mode); "
+                         "slo-aware folds premium queue depth into the "
+                         "least-loaded key")
     ap.add_argument("--total-pages", type=int, default=64,
                     help="shared host page budget across all fleet "
                          "engines (--fleet mode)")
@@ -516,6 +530,7 @@ def main():
                             watermark=args.watermark,
                             priority=args.priority,
                             deadline_ms=args.deadline_ms,
+                            tbt_deadline_ms=args.tbt_deadline_ms,
                             admission=args.admission,
                             aging_ticks=args.aging_ticks,
                             selection=args.selection,
@@ -552,6 +567,7 @@ def main():
                         prompt_len=args.prompt_len,
                         lazy_pages=args.lazy_pages, watermark=args.watermark,
                         priority=args.priority, deadline_ms=args.deadline_ms,
+                        tbt_deadline_ms=args.tbt_deadline_ms,
                         admission=args.admission,
                         aging_ticks=args.aging_ticks,
                         kv_dtype=args.kv_dtype,

@@ -372,13 +372,24 @@ class BlockManager:
 
 def _quantile(xs: List[float], q: float) -> float:
     """Nearest-rank quantile of ``xs`` (0.0 when empty) — enough for
-    the per-class TTFT p50/p95 the serving metrics report without
-    pulling numpy into this module."""
+    the per-class TTFT/TBT p50/p95 the serving metrics report without
+    pulling numpy into this module.
+
+    Contract (tests/test_load_harness.py pins it): the result is the
+    element at 1-based rank ``ceil(q * n)`` of the sorted sample —
+    order-insensitive, always an element of ``xs``, ``s[0]`` for
+    ``q <= 1/n`` and ``s[-1]`` for ``q = 1`` — i.e. the classic
+    nearest-rank percentile ``statistics`` texts define.  The rank is
+    computed on a rounded product because binary float can overshoot
+    an exact integer (``0.95 * 20 == 19.000000000000004``; a raw
+    ``ceil`` would skip rank 19 and report the sample maximum as
+    p95)."""
     if not xs:
         return 0.0
     s = sorted(xs)
-    i = max(0, min(len(s) - 1, math.ceil(q * len(s)) - 1))
-    return s[i]
+    n = len(s)
+    rank = max(1, min(n, math.ceil(round(q * n, 9))))
+    return s[rank - 1]
 
 
 @dataclasses.dataclass
@@ -428,14 +439,25 @@ class EngineMetrics:
         dataclasses.field(default_factory=dict)
     peak_pages_by_class: Dict[str, int] = \
         dataclasses.field(default_factory=dict)
+    # per-token decode latency (TBT = gap between consecutive token
+    # emissions, preemption replay gaps included); samples per class
+    # plus miss accounting for requests carrying a TBT deadline
+    tbt_s_by_class: Dict[str, List[float]] = \
+        dataclasses.field(default_factory=dict)
+    tbt_deadline_tokens_by_class: Dict[str, int] = \
+        dataclasses.field(default_factory=dict)
+    tbt_misses_by_class: Dict[str, int] = \
+        dataclasses.field(default_factory=dict)
     _t_start: Optional[float] = None
     _t_last: Optional[float] = None
 
-    def begin(self) -> None:
+    def begin(self, now: Optional[float] = None) -> None:
         """Call at the START of the first tick so the throughput window
-        includes the first tick's work (jit compile, first prefill)."""
+        includes the first tick's work (jit compile, first prefill).
+        ``now`` lets an engine on a virtual clock stamp the window
+        deterministically (None = wall time)."""
         if self._t_start is None:
-            self._t_start = time.perf_counter()
+            self._t_start = time.perf_counter() if now is None else now
 
     def note_first_token(self, priority: str, ttft: float, *,
                          deadlined: bool = False,
@@ -454,6 +476,24 @@ class EngineMetrics:
                 self.deadline_misses_by_class[priority] = \
                     self.deadline_misses_by_class.get(priority, 0) + 1
 
+    def note_decode_token(self, priority: str, tbt: float, *,
+                          deadlined: bool = False,
+                          missed: bool = False) -> None:
+        """Record one decode-token emission: ``tbt`` seconds since the
+        request's previous emission, for a request of class
+        ``priority``; ``deadlined`` marks the token as governed by a
+        per-token TBT deadline and ``missed`` that the gap blew it
+        (per-class miss *rate* = misses / deadlined tokens).  The
+        ``decode_tokens`` counter is maintained by the engine itself —
+        this method owns only the latency/deadline tallies."""
+        self.tbt_s_by_class.setdefault(priority, []).append(tbt)
+        if deadlined:
+            self.tbt_deadline_tokens_by_class[priority] = \
+                self.tbt_deadline_tokens_by_class.get(priority, 0) + 1
+            if missed:
+                self.tbt_misses_by_class[priority] = \
+                    self.tbt_misses_by_class.get(priority, 0) + 1
+
     def note_completion(self, priority: str) -> None:
         """Record one finished request of class ``priority``."""
         self.completed += 1
@@ -468,8 +508,10 @@ class EngineMetrics:
 
     def tick(self, *, queued: int, active: int, pages_in_use: int,
              cached_pages: int = 0, evictions: int = 0,
-             pages_by_class: Optional[Dict[str, int]] = None) -> None:
-        now = time.perf_counter()
+             pages_by_class: Optional[Dict[str, int]] = None,
+             now: Optional[float] = None) -> None:
+        if now is None:
+            now = time.perf_counter()
         if self._t_start is None:
             self._t_start = now
         self._t_last = now
@@ -525,6 +567,8 @@ class EngineMetrics:
             out.ttft_s.extend(m.ttft_s)
             for cls_name, ts in m.ttft_s_by_class.items():
                 out.ttft_s_by_class.setdefault(cls_name, []).extend(ts)
+            for cls_name, ts in m.tbt_s_by_class.items():
+                out.tbt_s_by_class.setdefault(cls_name, []).extend(ts)
             for acc, src in (
                     (out.completed_by_class, m.completed_by_class),
                     (out.preemptions_by_class, m.preemptions_by_class),
@@ -532,6 +576,9 @@ class EngineMetrics:
                      m.deadline_requests_by_class),
                     (out.deadline_misses_by_class,
                      m.deadline_misses_by_class),
+                    (out.tbt_deadline_tokens_by_class,
+                     m.tbt_deadline_tokens_by_class),
+                    (out.tbt_misses_by_class, m.tbt_misses_by_class),
                     (out.peak_pages_by_class, m.peak_pages_by_class)):
                 for k, v in src.items():
                     acc[k] = acc.get(k, 0) + v
@@ -545,22 +592,33 @@ class EngineMetrics:
 
     def class_snapshot(self) -> Dict[str, Dict[str, float]]:
         """Per-priority-class summary: completed count, TTFT mean /
-        p50 / p95, preemptions, deadline totals and miss rate, and the
-        class's peak concurrent page footprint.  Classes appear once
-        any request of theirs reaches a counter."""
+        p50 / p95, TBT mean / p50 / p95 with per-token deadline-miss
+        accounting, preemptions, TTFT deadline totals and miss rate,
+        and the class's peak concurrent page footprint.  Classes appear
+        once any request of theirs reaches a counter."""
         classes = (set(self.ttft_s_by_class) | set(self.completed_by_class)
                    | set(self.preemptions_by_class)
+                   | set(self.tbt_s_by_class)
                    | set(self.peak_pages_by_class))
         out: Dict[str, Dict[str, float]] = {}
         for cls in sorted(classes):
             ttfts = self.ttft_s_by_class.get(cls, [])
+            tbts = self.tbt_s_by_class.get(cls, [])
             dl_n = self.deadline_requests_by_class.get(cls, 0)
             dl_miss = self.deadline_misses_by_class.get(cls, 0)
+            tbt_n = self.tbt_deadline_tokens_by_class.get(cls, 0)
+            tbt_miss = self.tbt_misses_by_class.get(cls, 0)
             out[cls] = {
                 "completed": self.completed_by_class.get(cls, 0),
                 "ttft_avg_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
                 "ttft_p50_s": _quantile(ttfts, 0.50),
                 "ttft_p95_s": _quantile(ttfts, 0.95),
+                "tbt_avg_s": sum(tbts) / len(tbts) if tbts else 0.0,
+                "tbt_p50_s": _quantile(tbts, 0.50),
+                "tbt_p95_s": _quantile(tbts, 0.95),
+                "tbt_deadline_tokens": tbt_n,
+                "tbt_misses": tbt_miss,
+                "tbt_miss_rate": tbt_miss / max(tbt_n, 1),
                 "preemptions": self.preemptions_by_class.get(cls, 0),
                 "deadline_requests": dl_n,
                 "deadline_misses": dl_miss,

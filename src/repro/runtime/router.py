@@ -72,7 +72,8 @@ from repro.parallel.sharding import LogicalRules, SINGLE_DEVICE_RULES
 from repro.runtime.paged_kv import BlockManager, EngineMetrics
 from repro.runtime.sampler import Sampler, SamplingParams
 from repro.runtime.serving import (DEFAULT_PRIORITY, PagedServingEngine,
-                                   Request, SchedulerStallError)
+                                   Request, SchedulerStallError,
+                                   priority_level)
 
 
 class HostBudget:
@@ -286,16 +287,53 @@ class RoundRobin:
         return i
 
 
+class SLOAware:
+    """Fleet-aware SLO placement: premium backlog depth leads the
+    selection key, so new work steers away from replicas where
+    premium requests are already waiting — total load and page
+    pressure only break ties.
+
+    :class:`LeastLoaded` counts *requests* and treats a replica with
+    five queued batch jobs as busier than one with four queued premium
+    jobs, even though the premium queue is where TTFT/TBT deadlines go
+    to die.  This policy orders replicas by (queued premium-class
+    requests, active + queued total, live pages, index): a standard or
+    batch request avoids deepening a premium hot spot, and a premium
+    request lands where it will see the shortest premium line.  With no
+    premium traffic anywhere the first key is uniformly 0 and the
+    policy degenerates to exactly :class:`LeastLoaded`."""
+
+    name = "slo-aware"
+
+    @staticmethod
+    def premium_depth(eng: PagedServingEngine) -> int:
+        """Queued top-class (premium) requests on ``eng``."""
+        return sum(1 for r in eng.queue if priority_level(r) == 0)
+
+    def select(self, group: ReplicaGroup) -> int:
+        """Index of the replica with the shallowest premium backlog."""
+        return min(
+            range(len(group.engines)),
+            key=lambda i: (self.premium_depth(group.engines[i]),
+                           len(group.engines[i].seats)
+                           + len(group.engines[i].queue),
+                           group.engines[i].policy.pages_in_use(), i))
+
+
 def _make_selection(selection):
-    """Resolve a selection spec — ``"least-loaded"``, ``"round-robin"``
-    or an object with ``select(group) -> int`` — into a policy."""
+    """Resolve a selection spec — ``"least-loaded"``, ``"round-robin"``,
+    ``"slo-aware"`` or an object with ``select(group) -> int`` — into a
+    policy."""
     if isinstance(selection, str):
         if selection == "least-loaded":
             return LeastLoaded()
         if selection == "round-robin":
             return RoundRobin()
+        if selection == "slo-aware":
+            return SLOAware()
         raise ValueError(f"unknown replica selection {selection!r}; "
-                         "expected 'least-loaded' or 'round-robin'")
+                         "expected 'least-loaded', 'round-robin' or "
+                         "'slo-aware'")
     if not hasattr(selection, "select"):
         raise TypeError(f"selection policy {selection!r} has no select()")
     return selection
@@ -326,7 +364,9 @@ class ModelFleet:
                  prefix_cache: bool = True, lazy_pages: bool = True,
                  watermark: float = 0.05, admission="fcfs",
                  aging_ticks: int = 64,
-                 class_precision: Optional[Dict[str, str]] = None):
+                 class_precision: Optional[Dict[str, str]] = None,
+                 clock=None, record_trace: bool = True,
+                 policy_cls: Optional[type] = None):
         """Build one engine per (model, replica) and carve the budget.
 
         Args:
@@ -339,12 +379,20 @@ class ModelFleet:
               kind — and cheaper (quantized) pages draw
               proportionally less from it (see :class:`HostBudget`).
           selection: replica selection policy — ``"least-loaded"``
-              (default), ``"round-robin"``, or an object with
-              ``select(group) -> int``.
+              (default), ``"round-robin"``, ``"slo-aware"``, or an
+              object with ``select(group) -> int``.
           class_precision: SLO-class → minimum KV precision map applied
               fleet-wide (e.g. ``{"premium": "f32"}``); routing only
               considers replicas whose pool meets the class's floor,
               and every engine enforces the same floor at submit.
+          clock: zero-arg time source shared by every engine (None =
+              wall time); the load harness injects a virtual clock.
+          record_trace: keep per-engine event traces (default); the
+              load harness disables them to bound memory at 10⁵⁻⁶
+              requests.
+          policy_cls: placement-policy class per engine (None =
+              :class:`~repro.runtime.serving.PagedPolicy`); the load
+              harness passes ``workload.OraclePolicy``.
           (remaining args: per-engine knobs, as on
               :class:`PagedServingEngine`.)
 
@@ -417,7 +465,9 @@ class ModelFleet:
                     sampler=sampler, prefix_cache=prefix_cache,
                     lazy_pages=lazy_pages, watermark=watermark,
                     admission=admission, aging_ticks=aging_ticks,
-                    kv_dtype=dt, class_precision=self.class_precision)
+                    kv_dtype=dt, class_precision=self.class_precision,
+                    clock=clock, record_trace=record_trace,
+                    policy_cls=policy_cls)
                 self.budget.register((fm.name, i), eng.bm, floor)
                 engines.append(eng)
             group = ReplicaGroup(fm.name, fm.cfg, engines, floor)
@@ -468,6 +518,7 @@ class ModelFleet:
                sampling: Optional[SamplingParams] = None,
                priority: str = DEFAULT_PRIORITY,
                deadline_ms: Optional[float] = None,
+               tbt_deadline_ms: Optional[float] = None,
                session_id: Optional[str] = None) -> int:
         """Route one request to a replica of ``model``; returns its
         fleet-global rid.
@@ -517,7 +568,7 @@ class ModelFleet:
         group.engines[idx].submit(
             prompt, max_new_tokens=max_new_tokens, eos_id=eos_id,
             sampling=sampling, priority=priority, deadline_ms=deadline_ms,
-            rid=rid)
+            tbt_deadline_ms=tbt_deadline_ms, rid=rid)
         # commit routing state only after the engine accepted the
         # request: a validation failure must not pin the session to a
         # replica that holds none of its pages

@@ -188,6 +188,89 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, rid, step):
 
 
 # ---------------------------------------------------------------------------
+# Batched host path — numpy twin of sample_tokens
+# ---------------------------------------------------------------------------
+
+def sample_tokens_np(logits, temperature, top_k, top_p, seed, rid, step):
+    """Batched *host* sampler: the numpy twin of :func:`sample_tokens`,
+    token-for-token identical to both it and a per-row
+    :meth:`Sampler.sample` loop (tests/test_workload.py pins all
+    three).  The model-free load-harness oracle
+    (``runtime.workload.OraclePolicy``) decodes millions of tokens per
+    run; a per-row Python loop over :meth:`Sampler.sample` would
+    dominate its wall time, and a jnp round-trip would pay device
+    dispatch for arithmetic that never needs the device.
+
+    Args:
+      logits: (B, V) float32 ndarray of unnormalized log-probs.
+      temperature: (B,) float32; rows ``<= 0`` take the plain argmax.
+      top_k: (B,) int32 (0 = off).
+      top_p: (B,) float32 (1.0 = off).
+      seed, rid, step: (B,) integer arrays — the per-row RNG key
+        (hashed per row exactly like the scalar ``_gumbel_np``).
+
+    Returns:
+      (B,) int32 token ids.
+    """
+    x = np.asarray(logits, np.float32)
+    B, V = x.shape
+    temperature = np.asarray(temperature, np.float32)
+    top_k = np.asarray(top_k, np.int32)
+    top_p = np.asarray(top_p, np.float32)
+    greedy_tok = np.argmax(x, axis=-1).astype(np.int32)
+    stoch = temperature > 0
+    if not stoch.any():
+        return greedy_tok
+    if not stoch.all():
+        # run the stochastic path on just the stochastic rows: every
+        # per-row quantity (threshold, nucleus, Gumbel key) is hashed
+        # from (seed, rid, step), never from batch position, so the
+        # subset call is bit-identical to the full-batch one — and in
+        # mixed batches (the oracle default is 25% stochastic) it
+        # skips the O(V log V) sort work for the greedy majority.
+        out = greedy_tok.copy()
+        idx = np.nonzero(stoch)[0]
+        out[idx] = sample_tokens_np(
+            x[idx], temperature[idx], np.asarray(top_k, np.int32)[idx],
+            np.asarray(top_p, np.float32)[idx],
+            np.asarray(seed)[idx], np.asarray(rid)[idx],
+            np.asarray(step)[idx])
+        return out
+    t_safe = np.where(stoch, temperature, np.float32(1.0)).astype(np.float32)
+    x = x / t_safe[:, None]
+    # top-k: drop everything below the k-th largest (ties at the
+    # threshold survive, matching the oracle); the O(V log V) sort is
+    # skipped entirely when no row uses top-k
+    apply_k = ((top_k > 0) & (top_k < V))[:, None]
+    if apply_k.any():
+        kth_idx = np.clip(top_k, 1, V) - 1
+        kth = np.take_along_axis(np.sort(x, axis=-1)[:, ::-1],
+                                 kth_idx[:, None], axis=-1)
+        x = np.where(apply_k & (x < kth), -np.inf, x).astype(np.float32)
+    # top-p: keep the smallest descending-probability prefix reaching
+    # top_p (the top token always survives: its exclusive cumsum is 0)
+    p = np.exp(x - np.max(x, axis=-1, keepdims=True))
+    p = p / np.sum(p, axis=-1, keepdims=True)
+    order = np.argsort(-p, axis=-1, kind="stable")
+    p_sorted = np.take_along_axis(p, order, axis=-1)
+    keep_sorted = (np.cumsum(p_sorted, axis=-1) - p_sorted) < top_p[:, None]
+    in_nucleus = np.zeros((B, V), bool)
+    np.put_along_axis(in_nucleus, order, keep_sorted, axis=-1)
+    x = np.where((top_p < 1.0)[:, None] & ~in_nucleus,
+                 -np.inf, x).astype(np.float32)
+    # per-row Gumbel noise, hashed row-wise exactly like _gumbel_np
+    k = _mix_np(np.asarray(seed, np.uint32) ^ np.uint32(_GOLD))
+    k = _mix_np(k ^ np.asarray(rid, np.uint32))
+    k = _mix_np(k ^ np.asarray(step, np.uint32))
+    u32 = _mix_np(k[:, None] ^ np.arange(V, dtype=np.uint32)[None, :])
+    u = ((u32 >> np.uint32(8)).astype(np.float32) + np.float32(0.5)) \
+        * np.float32(2.0 ** -24)
+    g = (-np.log(-np.log(u))).astype(np.float32)
+    stoch_tok = np.argmax(x + g, axis=-1).astype(np.int32)
+    return np.where(stoch, stoch_tok, greedy_tok)
+
+
+# ---------------------------------------------------------------------------
 # Host oracle
 # ---------------------------------------------------------------------------
 

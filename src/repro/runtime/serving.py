@@ -166,9 +166,15 @@ class SLOAdmission:
       any request — ``batch`` included — eventually outranks an
       endless stream of fresh ``premium`` arrivals: the starvation
       bound is ``(level_gap + 1) * aging_ticks`` ticks of queue wait.
-    - within a class, requests with a ``deadline_ms`` sort earliest
-      deadline first (EDF); requests without one sort after all
-      deadlined peers;
+    - within a class, requests sort earliest *effective deadline*
+      first (EDF).  The effective deadline is the earlier of the TTFT
+      deadline (``t_submit + deadline_ms``) and — for TBT-deadlined
+      requests — the next-token due time (last emission, or submit
+      when nothing is emitted yet, plus ``tbt_deadline_ms``): a
+      preempted decode-deadline request re-queues with the urgency of
+      its *next* token, and a fresh TBT-deadlined request carries its
+      first-token urgency from submit.  Requests with neither
+      deadline sort after all deadlined peers;
     - remaining ties fall back to submit order (rid), i.e. FCFS — a
       uniform-priority, no-deadline workload admits in exactly the
       FCFS order.
@@ -187,19 +193,52 @@ class SLOAdmission:
 
     def rank(self, req: "Request", tick: int) -> Tuple[int, float, int]:
         """Admission key for ``req`` at scheduler ``tick`` (lower is
-        admitted first): (aged priority level, absolute deadline
-        seconds or +inf, rid)."""
+        admitted first): (aged priority level, effective absolute
+        deadline seconds or +inf, rid).  The effective deadline is the
+        earlier of the TTFT deadline and the TBT next-token due time
+        (see the class docstring)."""
         waited = max(0, tick - req.submit_tick)
         eff = priority_level(req) - waited // self.aging_ticks
         deadline = (req.t_submit + req.deadline_ms / 1e3
                     if req.deadline_ms is not None else math.inf)
+        tbt_ms = getattr(req, "tbt_deadline_ms", None)  # stub-tolerant
+        if tbt_ms is not None:
+            base = (req.t_last_token if req.t_last_token is not None
+                    else req.t_submit)
+            deadline = min(deadline, base + tbt_ms / 1e3)
         return (eff, deadline, req.rid)
 
     def select(self, sched: "Scheduler") -> Optional["Request"]:
-        """Best-ranked queued request for this tick, or None."""
-        if not sched.queue:
+        """Best-ranked queued request for this tick, or None.
+
+        Single manual pass with :meth:`rank`'s key computation inlined:
+        this scan is O(queue) per free seat per tick and dominates an
+        overloaded engine's host time (the load harness drives queues
+        thousands deep), where ``min(queue, key=...)`` pays a Python
+        frame per element.  Must order identically to
+        ``min(queue, key=lambda r: self.rank(r, tick))``."""
+        queue = sched.queue
+        if not queue:
             return None
-        return min(sched.queue, key=lambda r: self.rank(r, sched._tick))
+        tick, aging = sched._tick, self.aging_ticks
+        levels = PRIORITIES
+        best = None
+        best_key: Tuple[int, float, int] = (0, 0.0, 0)
+        for req in queue:
+            waited = tick - req.submit_tick
+            eff = levels[req.priority] - (waited if waited > 0 else 0) // aging
+            deadline = (req.t_submit + req.deadline_ms / 1e3
+                        if req.deadline_ms is not None else math.inf)
+            tbt_ms = req.tbt_deadline_ms
+            if tbt_ms is not None:
+                due = (req.t_last_token if req.t_last_token is not None
+                       else req.t_submit) + tbt_ms / 1e3
+                if due < deadline:
+                    deadline = due
+            key = (eff, deadline, req.rid)
+            if best is None or key < best_key:
+                best, best_key = req, key
+        return best
 
 
 def _make_admission(admission, aging_ticks: int):
@@ -231,6 +270,15 @@ class Request:
       deadline_ms: optional TTFT deadline, milliseconds from submit;
           drives EDF ordering under :class:`SLOAdmission` and the
           deadline-miss metric/trace event under every policy.
+      tbt_deadline_ms: optional per-token TBT (time-between-tokens)
+          decode deadline, milliseconds between consecutive emitted
+          tokens.  Under :class:`SLOAdmission` the request's *next*
+          token due time (last emission + TBT budget) joins the EDF
+          key, so a preempted TBT-deadlined request re-admits with
+          real urgency; :meth:`Scheduler.pick_victim` never prefers a
+          TBT-deadlined request as a preemption victim while a
+          same-or-lower-class victim without one exists; TBT misses
+          are counted per class under every policy.
     The remaining fields are filled in by the engine as the request
     moves through admit → prefill → decode → finish (or preempt)."""
     rid: int
@@ -240,6 +288,7 @@ class Request:
     sampling: SamplingParams = GREEDY
     priority: str = DEFAULT_PRIORITY
     deadline_ms: Optional[float] = None
+    tbt_deadline_ms: Optional[float] = None
     # filled by the engine:
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None      # seat index (paged) / cache slot (fixed)
@@ -257,6 +306,7 @@ class Request:
     submit_tick: int = 0            # scheduler tick at submit (aging base)
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
+    t_last_token: Optional[float] = None  # latest emission (TBT base)
     t_done: Optional[float] = None
 
     @property
@@ -278,7 +328,8 @@ class Scheduler:
 
     def __init__(self, policy, *, max_seats: int,
                  sampler: Optional[Sampler] = None, page_capacity: int = 0,
-                 admission="fcfs", aging_ticks: int = 64):
+                 admission="fcfs", aging_ticks: int = 64,
+                 clock=None, record_trace: bool = True):
         """Bind ``policy`` (the KV placement + model arithmetic) to a
         fresh scheduler.
 
@@ -298,6 +349,18 @@ class Scheduler:
           aging_ticks: SLO anti-starvation bound — a queued request
               gains one effective priority class per this many ticks
               waited.  Ignored by FCFS.
+          clock: zero-arg callable returning monotonic seconds; every
+              timestamp the engine records (submit, TTFT, TBT,
+              completion, metric windows) reads it.  None (default) =
+              ``time.perf_counter`` — wall time, the serving behavior.
+              The load harness injects a
+              :class:`~repro.runtime.workload.VirtualClock` so
+              deadline verdicts and throughput are deterministic
+              functions of the schedule, not of host speed.
+          record_trace: keep the per-event ``trace`` list (default).
+              ``False`` sets ``trace = None`` and skips every append —
+              at 10⁵⁻⁶-request harness scale the trace would dominate
+              memory.
 
         Raises:
           ValueError: unknown ``admission`` name or ``aging_ticks < 1``.
@@ -307,14 +370,22 @@ class Scheduler:
         self.max_seats = max_seats
         self.sampler = sampler or Sampler()
         self.admission = _make_admission(admission, aging_ticks)
+        self.clock = clock if clock is not None else time.perf_counter
         self.seats: Dict[int, Request] = {}             # seat -> request
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
         self.metrics = EngineMetrics(page_capacity=page_capacity)
-        self.trace: List[Tuple[int, str, int]] = []
+        self.trace: Optional[List[Tuple[int, str, int]]] = (
+            [] if record_trace else None)
         self._next_rid = 0
         self._tick = 0
         policy.bind(self)
+
+    def _trace(self, event: str, rid: int) -> None:
+        """Append one (tick, event, rid) trace tuple — no-op when the
+        trace is disabled (``record_trace=False``)."""
+        if self.trace is not None:
+            self.trace.append((self._tick, event, rid))
 
     # -- queue ---------------------------------------------------------------
 
@@ -323,6 +394,7 @@ class Scheduler:
                sampling: Optional[SamplingParams] = None,
                priority: str = DEFAULT_PRIORITY,
                deadline_ms: Optional[float] = None,
+               tbt_deadline_ms: Optional[float] = None,
                rid: Optional[int] = None) -> int:
         """Queue one request; returns its engine-assigned rid.
 
@@ -338,6 +410,13 @@ class Scheduler:
           deadline_ms: optional TTFT deadline in milliseconds from now
               (must be > 0): EDF ordering under ``slo`` admission and
               deadline-miss accounting under every policy.
+          tbt_deadline_ms: optional per-token decode deadline in
+              milliseconds (must be > 0): each decode token is due
+              this long after the previous emission.  Folds into the
+              ``slo`` EDF key (the next-token due time competes with
+              the TTFT deadline), shields the request in
+              :meth:`pick_victim`, and drives per-class TBT-miss
+              accounting under every policy.
           rid: explicit request id (fleet routing — the
               :class:`~repro.runtime.router.ModelFleet` assigns rids
               from one fleet-global counter so sampler keys
@@ -358,6 +437,9 @@ class Scheduler:
                              f"of {sorted(PRIORITIES)}")
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        if tbt_deadline_ms is not None and tbt_deadline_ms <= 0:
+            raise ValueError(
+                f"tbt_deadline_ms must be > 0, got {tbt_deadline_ms}")
         if rid is None:
             rid = self._next_rid
         elif rid < self._next_rid:
@@ -370,7 +452,8 @@ class Scheduler:
         req = Request(rid, np.asarray(prompt, np.int32),
                       max_new_tokens, eos_id, sampling or GREEDY,
                       priority=priority, deadline_ms=deadline_ms,
-                      submit_tick=self._tick, t_submit=time.perf_counter())
+                      tbt_deadline_ms=tbt_deadline_ms,
+                      submit_tick=self._tick, t_submit=self.clock())
         self.policy.validate(req)
         self._next_rid = rid + 1
         self.queue.append(req)
@@ -398,10 +481,10 @@ class Scheduler:
             req.slot = seat
             self.seats[seat] = req
             self.metrics.admitted += 1
-            self.trace.append((self._tick, "admit", req.rid))
+            self._trace("admit", req.rid)
             if req.cached_tokens:
                 self.metrics.cached_prompt_tokens += req.cached_tokens
-                self.trace.append((self._tick, "prefix_hit", req.rid))
+                self._trace("prefix_hit", req.rid)
 
     # -- token bookkeeping ----------------------------------------------------
 
@@ -418,31 +501,44 @@ class Scheduler:
         row the last prompt position's ``(V,)`` logits."""
         if not ready:
             return
-        rows = jnp.stack([row for _, row in ready])
-        if all(req.sampling.greedy for req, _ in ready):
-            # one on-device argmax over the burst; K ints cross to host
-            toks = np.asarray(  # repro-lint: disable=RL001
-                jnp.argmax(rows, axis=-1), np.int32)
+        if all(isinstance(row, np.ndarray) for _, row in ready):
+            # oracle-policy path: rows never left the host, so a jnp
+            # round-trip would only add dispatch latency at harness
+            # scale — same argmax/Sampler algebra on numpy arrays
+            host = np.stack([row for _, row in ready])
+            if all(req.sampling.greedy for req, _ in ready):
+                toks = np.argmax(host, axis=-1).astype(np.int32)
+            else:
+                toks = [self.sampler.sample(host[i], req.sampling,
+                                            rid=req.rid, step=0)
+                        for i, (req, _) in enumerate(ready)]
         else:
-            # one (K, V) transfer for the whole burst
-            host = np.asarray(rows)  # repro-lint: disable=RL001
-            toks = [self.sampler.sample(host[i], req.sampling,
-                                        rid=req.rid, step=0)
-                    for i, (req, _) in enumerate(ready)]
-        now = time.perf_counter()
+            rows = jnp.stack([row for _, row in ready])
+            if all(req.sampling.greedy for req, _ in ready):
+                # one on-device argmax over the burst; K ints cross to host
+                toks = np.asarray(  # repro-lint: disable=RL001
+                    jnp.argmax(rows, axis=-1), np.int32)
+            else:
+                # one (K, V) transfer for the whole burst
+                host = np.asarray(rows)  # repro-lint: disable=RL001
+                toks = [self.sampler.sample(host[i], req.sampling,
+                                            rid=req.rid, step=0)
+                        for i, (req, _) in enumerate(ready)]
+        now = self.clock()
         for (req, _), tok in zip(ready, toks):
             tok = int(tok)
             req.generated.append(tok)
             req.t_first_token = now
+            req.t_last_token = now
             ttft = now - req.t_submit
             missed = (req.deadline_ms is not None
                       and ttft * 1e3 > req.deadline_ms)
             self.metrics.note_first_token(
                 req.priority, ttft, deadlined=req.deadline_ms is not None,
                 missed=missed)
-            self.trace.append((self._tick, "first_token", req.rid))
+            self._trace("first_token", req.rid)
             if missed:
-                self.trace.append((self._tick, "deadline_miss", req.rid))
+                self._trace("deadline_miss", req.rid)
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if req.max_new_tokens <= 1 or hit_eos:
                 self.finish(req)
@@ -472,7 +568,19 @@ class Scheduler:
     def _emit_decode_token(self, req: Request, tok: int) -> None:
         req.generated.append(tok)
         self.metrics.decode_tokens += 1
-        self.trace.append((self._tick, "decode", req.rid))
+        now = self.clock()
+        # TBT = gap since the previous emission (first token included
+        # as the base); preemption replay gaps land here by design —
+        # that is exactly the stall a TBT deadline is meant to expose
+        tbt = now - req.t_last_token
+        req.t_last_token = now
+        deadlined = req.tbt_deadline_ms is not None
+        missed = deadlined and tbt * 1e3 > req.tbt_deadline_ms
+        self.metrics.note_decode_token(req.priority, tbt,
+                                       deadlined=deadlined, missed=missed)
+        self._trace("decode", req.rid)
+        if missed:
+            self._trace("tbt_miss", req.rid)
         hit_eos = req.eos_id is not None and tok == req.eos_id
         if len(req.generated) >= req.max_new_tokens or hit_eos:
             self.finish(req)
@@ -482,12 +590,12 @@ class Scheduler:
         seat frees, and per-engine + per-class completion counters and
         the ``finish`` trace event are recorded."""
         req.done = True
-        req.t_done = time.perf_counter()
+        req.t_done = self.clock()
         self.policy.release(req)
         del self.seats[req.slot]
         self.finished.append(req)
         self.metrics.note_completion(req.priority)
-        self.trace.append((self._tick, "finish", req.rid))
+        self._trace("finish", req.rid)
 
     def preempt(self, req: Request) -> None:
         """Evict a decoding request under memory pressure: the policy
@@ -518,17 +626,22 @@ class Scheduler:
         req.submit_tick = self._tick
         req.times_preempted += 1
         self.metrics.note_preemption(req.priority)
-        self.trace.append((self._tick, "preempt", req.rid))
+        self._trace("preempt", req.rid)
 
     def pick_victim(self, victims: List[Request],
                     grower: Request) -> Request:
         """Priority-aware preemption victim among ``victims`` (all
-        decoding) on behalf of ``grower``: the lowest class goes first,
-        youngest (highest rid) within a class — and a grower never
-        preempts a strictly higher class than its own; when only
-        higher-class victims exist it evicts itself.  With uniform
-        priorities this is exactly the historical youngest-first
-        rule.
+        decoding) on behalf of ``grower``: the lowest class goes first;
+        within a class, requests *without* a TBT decode deadline are
+        preferred over TBT-deadlined ones (evicting a
+        decode-deadline-critical request guarantees a TBT miss on its
+        replay, so it is never the preferred victim while any
+        same-or-lower-class alternative exists); youngest (highest
+        rid) breaks the remaining ties — and a grower never preempts a
+        strictly higher class than its own; when only higher-class
+        victims exist it evicts itself.  With uniform priorities and
+        no TBT deadlines anywhere this is bit-identical to the
+        historical youngest-first rule (the middle key is constant).
 
         When ``grower`` is itself in ``victims`` (as in
         ``PagedPolicy._grow_tick``), the ``max`` alone already yields
@@ -536,7 +649,8 @@ class Scheduler:
         in this ordering — so the explicit guard below exists for
         callers passing a victim set that *excludes* the grower, where
         it enforces the never-preempt-upward contract."""
-        victim = max(victims, key=lambda r: (priority_level(r), r.rid))
+        victim = max(victims, key=lambda r: (
+            priority_level(r), r.tbt_deadline_ms is None, r.rid))
         if priority_level(victim) < priority_level(grower):
             return grower
         return victim
@@ -547,7 +661,7 @@ class Scheduler:
         """One engine tick: admission, one prefill round, one decode
         round, then a metrics sample (queue depth, active seats, page
         occupancy overall and per priority class)."""
-        self.metrics.begin()
+        self.metrics.begin(self.clock())
         self._tick += 1
         self._admit_from_queue()
         self.policy.prefill_tick()
@@ -561,7 +675,8 @@ class Scheduler:
         self.metrics.tick(queued=len(self.queue), active=len(self.seats),
                           pages_in_use=self.policy.pages_in_use(),
                           cached_pages=cached, evictions=evictions,
-                          pages_by_class=pages_by_class)
+                          pages_by_class=pages_by_class,
+                          now=self.clock())
 
     def run(self, max_ticks: Optional[int] = None) -> List[Request]:
         """Tick until every submitted request finishes.
@@ -828,10 +943,27 @@ class PagedPolicy:
                 f"{self.n_tables} pages > capacity {self.bm.capacity}; "
                 "raise num_pages, lower max_seq_len, or set "
                 "lazy_pages=False")
-        self.cache = M.init_paged_cache(cfg, num_pages, page_size,
-                                        kv_dtype=kv_dtype)
         self.page_table = np.zeros((max_seats, self.n_tables), np.int32)
         self.pos = np.zeros((max_seats,), np.int32)     # next write position
+        self.fused = fused
+        self._prefill_row: Optional[Tuple[int, jnp.ndarray]] = None
+        # device mirrors of the serving state, rebuilt only on churn
+        # (self._dirty); between churn events decode ticks run entirely
+        # from the arrays the previous fused tick returned, so the only
+        # per-tick host<->device traffic is the token vector coming back
+        self._dev: Optional[Dict[str, jnp.ndarray]] = None
+        self._dirty = True
+        self._init_model_state(num_pages)
+
+    def _init_model_state(self, num_pages: int) -> None:
+        """Allocate the device KV pool and compile the jitted tick
+        functions.  Split out of ``__init__`` so a model-free policy
+        (:class:`~repro.runtime.workload.OraclePolicy`) can inherit all
+        the placement bookkeeping above while replacing the device
+        state with host stubs."""
+        cfg, rules = self.cfg, self.rules
+        self.cache = M.init_paged_cache(cfg, num_pages, self.page_size,
+                                        kv_dtype=self.kv_dtype)
 
         self._step_fn = jax.jit(
             lambda p, c, t, q, pt, nv: M.paged_decode_step(
@@ -845,7 +977,6 @@ class PagedPolicy:
         self._prefill_fn = jax.jit(
             lambda p, c, t, meta, pt: M.paged_decode_step(
                 p, cfg, c, t, meta[:1], pt, meta[1:], rules, self.opts))
-        self._prefill_row: Optional[Tuple[int, jnp.ndarray]] = None
         # donate the pool so copy-on-write is an in-place one-page update,
         # not a fresh copy of the whole KV pool (donation is a no-op on
         # CPU and would only warn there)
@@ -860,7 +991,6 @@ class PagedPolicy:
         # 0=params 1=cache 2=last 3=pos 4=table 5=nv 6=temp 7=top_k
         # 8=top_p 9=seed 10=rid 11=step; outputs alias 1->cache, 2->toks,
         # 3->pos, 4->table, 11->step.
-        self.fused = fused
         fdonate = ((1, 2, 3, 4, 11)
                    if jax.default_backend() != "cpu" else ())
         self._fused_fn = jax.jit(
@@ -868,12 +998,6 @@ class PagedPolicy:
                 M.fused_decode_tick(p, cfg, c, last, q, pt, nv, t, tk, tp,
                                     sd, rd, st, rules, self.opts),
             donate_argnums=fdonate)
-        # device mirrors of the serving state, rebuilt only on churn
-        # (self._dirty); between churn events decode ticks run entirely
-        # from the arrays the previous fused tick returned, so the only
-        # per-tick host<->device traffic is the token vector coming back
-        self._dev: Optional[Dict[str, jnp.ndarray]] = None
-        self._dirty = True
 
     def bind(self, sched: Scheduler) -> None:
         """Attach the owning :class:`Scheduler` (called once, by its
@@ -1061,7 +1185,7 @@ class PagedPolicy:
             self._prefill_row[1])
         req.prefill_pos += c
         self.sched.metrics.prefill_tokens += c
-        self.sched.trace.append((self.sched._tick, "prefill_chunk", req.rid))
+        self.sched._trace("prefill_chunk", req.rid)
         self._register_full_pages(req)
         if req.prefill_pos == len(src):
             self.pos[seat] = len(src)
@@ -1232,11 +1356,13 @@ class ServingEngine(Scheduler):
                  rules: LogicalRules = SINGLE_DEVICE_RULES,
                  opts: Optional[M.RunOptions] = None,
                  sampler: Optional[Sampler] = None,
-                 admission="fcfs", aging_ticks: int = 64):
+                 admission="fcfs", aging_ticks: int = 64,
+                 clock=None, record_trace: bool = True):
         policy = FixedSlotPolicy(cfg, params, slots=slots, max_len=max_len,
                                  rules=rules, opts=opts)
         super().__init__(policy, max_seats=slots, sampler=sampler,
-                         admission=admission, aging_ticks=aging_ticks)
+                         admission=admission, aging_ticks=aging_ticks,
+                         clock=clock, record_trace=record_trace)
         self.cfg = cfg
         self.params = params
         self.B = slots
@@ -1300,18 +1426,25 @@ class PagedServingEngine(Scheduler):
                  watermark: float = 0.05, fused: bool = True,
                  admission="fcfs", aging_ticks: int = 64,
                  kv_dtype: Optional[str] = None,
-                 class_precision: Optional[Dict[str, str]] = None):
-        policy = PagedPolicy(cfg, params, page_size=page_size,
-                             num_pages=num_pages, max_seats=max_seats,
-                             max_seq_len=max_seq_len,
-                             prefill_chunk=prefill_chunk, rules=rules,
-                             opts=opts, prefix_cache=prefix_cache,
-                             lazy_pages=lazy_pages, watermark=watermark,
-                             fused=fused, kv_dtype=kv_dtype,
-                             class_precision=class_precision)
+                 class_precision: Optional[Dict[str, str]] = None,
+                 clock=None, record_trace: bool = True,
+                 policy_cls: Optional[type] = None):
+        # policy_cls swaps the placement+arithmetic implementation while
+        # keeping every Scheduler behavior: the load harness passes
+        # workload.OraclePolicy (model-free hash logits) here
+        policy = (policy_cls or PagedPolicy)(
+            cfg, params, page_size=page_size,
+            num_pages=num_pages, max_seats=max_seats,
+            max_seq_len=max_seq_len,
+            prefill_chunk=prefill_chunk, rules=rules,
+            opts=opts, prefix_cache=prefix_cache,
+            lazy_pages=lazy_pages, watermark=watermark,
+            fused=fused, kv_dtype=kv_dtype,
+            class_precision=class_precision)
         super().__init__(policy, max_seats=max_seats, sampler=sampler,
                          page_capacity=policy.bm.capacity,
-                         admission=admission, aging_ticks=aging_ticks)
+                         admission=admission, aging_ticks=aging_ticks,
+                         clock=clock, record_trace=record_trace)
         self.metrics.kv_dtype = policy.kv_dtype_name
         self.metrics.page_bytes = policy.page_bytes
         self.cfg = cfg

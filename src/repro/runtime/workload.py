@@ -1,0 +1,509 @@
+"""Trace-driven workload model + token-oracle stub for load testing.
+
+The serving stack's CI workloads top out at tens of requests — enough
+to pin scheduler semantics, far too small to exercise aging, budget
+contention, TBT deadlines, or replica placement at the request volumes
+the ROADMAP's north star implies.  This module provides the two halves
+of a load harness that drives the REAL scheduling machinery at
+10⁵–10⁶ requests in seconds of wall time:
+
+**A parameterized workload generator** (:class:`WorkloadSpec` /
+:func:`generate_workload`) modeled on observed LLM-platform traffic
+(PAPERS.md: the SAKURAONE follow-up's workload characterization —
+diurnal, bursty, session-chained, heavy-tailed):
+
+- arrivals: Gamma-renewal process (``burstiness`` inflates the
+  inter-arrival coefficient of variation past Poisson) modulated by a
+  sinusoidal diurnal rate envelope;
+- sessions: geometric turn counts with exponential think time between
+  turns; each turn's prompt extends the session's context, so
+  follow-up turns hit the home replica's prefix cache;
+- shared prefixes: sessions draw a system prompt from a Zipf-weighted
+  catalog — a few prefixes dominate, exercising refcounted sharing;
+- lengths: lognormal prompt and output tokens (heavy-tailed);
+- classes: premium / standard / batch mix with per-class TTFT and TBT
+  deadlines.
+
+**A model-free oracle engine** (:class:`OracleModel` /
+:class:`OraclePolicy`): the paged serving stack with the model
+arithmetic replaced by O(1)-per-token hash-derived logits.
+``OraclePolicy`` subclasses the real
+:class:`~repro.runtime.serving.PagedPolicy` and overrides ONLY the
+two tick methods that touch the device — admission, placement, prefix
+caching, copy-on-write accounting, lazy growth, preemption, budget
+checks, and every Scheduler behavior run unmodified (byte-identical
+code paths), so harness results transfer to the real engine
+(tests/test_load_harness.py pins the trace-event parity).
+
+The oracle's "logits" for a decode position are a pure function of
+``(rid, step, last_token)`` — NOT of the schedule — so a request's
+token stream is exactly reproducible across runs, seeds permitting,
+and survives preempt-and-recompute bit-for-bit just like the real
+engine's (the replay feeds the same ``(rid, step, last)`` keys).
+
+Determinism contract: one seed fixes the workload trace exactly
+(:func:`generate_workload` draws everything from one
+``np.random.default_rng(seed)``), and a fleet on a
+:class:`VirtualClock` stepped by the harness produces bit-identical
+metrics, token streams, and deadline verdicts on every run — no wall
+clock anywhere in the loop.  See docs/benchmarks.md §"Workload 8".
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.router import FleetModel, ModelFleet
+from repro.runtime.sampler import (SamplingParams, _MASK32, _mix_np,
+                                   sample_tokens_np)
+from repro.runtime.serving import PRIORITIES, PagedPolicy
+
+#: salt separating oracle-logit hashing from the sampler's Gumbel keys
+#: (same fmix32 mixer; a shared key would correlate logits with noise)
+_ORACLE_SALT = 0x27220A95
+
+
+class VirtualClock:
+    """Deterministic time source for engines under test.
+
+    A zero-arg callable (the :class:`~repro.runtime.serving.Scheduler`
+    ``clock`` contract) returning seconds; the load harness advances it
+    explicitly per fleet tick from its cost model, so TTFT/TBT values
+    and deadline verdicts are functions of the schedule alone."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        """Move time forward by ``dt`` seconds (>= 0)."""
+        if dt < 0:
+            raise ValueError(f"cannot advance a clock backwards: {dt}")
+        self.now += dt
+
+
+class OracleModel:
+    """Hash-derived logits: the model-arithmetic stub behind
+    :class:`OraclePolicy`.
+
+    Each (request, step) position's logit row derives from fmix32
+    avalanches of ``(rid, step, last_token)`` — O(vocab) integer work
+    per token, no parameters, no device.  The row is schedule- and
+    batch-independent, so token streams replay exactly under
+    preemption and are identical across engine/replica placements
+    (the same properties the real model provides via its KV cache,
+    delivered here by construction)."""
+
+    def __init__(self, vocab: int = 64, scale: float = 6.0):
+        if vocab < 2:
+            raise ValueError(f"vocab must be >= 2, got {vocab}")
+        self.vocab = vocab
+        self.scale = np.float32(scale)
+        self._lanes = np.arange(vocab, dtype=np.uint32)
+
+    def logits_batch(self, rids, steps, last) -> np.ndarray:
+        """(B, vocab) float32 logits for (B,) integer key arrays."""
+        k = _mix_np(np.asarray(rids, np.uint32) ^ np.uint32(_ORACLE_SALT))
+        k = _mix_np(k ^ np.asarray(steps, np.uint32))
+        k = _mix_np(k ^ np.asarray(last, np.uint32))
+        u32 = _mix_np(k[:, None] ^ self._lanes[None, :])
+        u = (u32 >> np.uint32(8)).astype(np.float32) * np.float32(2.0 ** -24)
+        return u * self.scale
+
+    def logits_row(self, rid: int, step: int, last: int) -> np.ndarray:
+        """(vocab,) float32 logits for one scalar key."""
+        return self.logits_batch(
+            np.asarray([rid & _MASK32], np.uint32),
+            np.asarray([step & _MASK32], np.uint32),
+            np.asarray([last & _MASK32], np.uint32))[0]
+
+
+class OraclePolicy(PagedPolicy):
+    """The real paged placement policy with the device replaced by
+    :class:`OracleModel` — the load harness's engine core.
+
+    Inherits ``try_admit`` / ``release`` / ``preempt`` / ``validate`` /
+    ``_grow_tick`` / ``_register_full_pages`` (and through them every
+    BlockManager / HostBudget interaction) unmodified; overrides the
+    model-state constructor hook plus ``prefill_tick`` / ``decode_tick``
+    with pure-numpy equivalents that preserve the real ticks' event
+    order exactly: one prompt chunk per tick for the lowest-rid
+    mid-prefill request, then one decode token per completed seat in
+    seat order.  Pass it to
+    :class:`~repro.runtime.serving.PagedServingEngine` or
+    :class:`~repro.runtime.router.ModelFleet` via ``policy_cls``."""
+
+    #: oracle vocabulary width — small so per-token work stays O(1)-ish
+    vocab = 64
+
+    def _init_model_state(self, num_pages: int) -> None:
+        # no KV pool, no jit: pages are pure bookkeeping entries here.
+        # CoW degrades to the identity — the BlockManager still tracks
+        # the copy, which is all the harness measures.
+        self.cache = None
+        self._cow_fn = lambda cache, src, dst: cache
+        self.model = OracleModel(self.vocab)
+
+    def prefill_tick(self) -> None:
+        """Numpy twin of ``PagedPolicy.prefill_tick``: same candidate
+        choice (lowest rid), same chunking, same page registration and
+        trace events — minus the device prefill."""
+        sched = self.sched
+        cands = [r for r in sched.seats.values()
+                 if r.prefill_pos < len(r.prefill_src)]
+        if not cands:
+            return
+        req = min(cands, key=lambda r: r.rid)
+        src = req.prefill_src
+        c = min(self.prefill_chunk, len(src) - req.prefill_pos)
+        req.prefill_pos += c
+        sched.metrics.prefill_tokens += c
+        sched._trace("prefill_chunk", req.rid)
+        self._register_full_pages(req)
+        if req.prefill_pos == len(src):
+            self.pos[req.slot] = len(src)
+            self._dirty = True           # seat joins the decoding set
+            if req.resume_tokens is None:
+                row = self.model.logits_row(req.rid, 0, int(src[-1]))
+                sched._emit_first_tokens([(req, row)])
+            # else: replay — TTFT token already emitted before the
+            # preemption; decode resumes by feeding generated[-1]
+
+    def decode_tick(self) -> None:
+        """Numpy twin of the real decode tick: lazy growth first, then
+        one token per decoding seat via batched hash logits + the
+        batched host sampler (bit-identical to per-row
+        ``Sampler.sample`` — tests/test_workload.py pins it)."""
+        sched = self.sched
+        if self.lazy:
+            self._grow_tick()
+        decoding = self._decoding_seats()
+        if not decoding:
+            return
+        reqs = [sched.seats[s] for s in decoding]
+        rids = np.asarray([r.rid & _MASK32 for r in reqs], np.uint32)
+        steps = np.asarray([len(r.generated) & _MASK32 for r in reqs],
+                           np.uint32)
+        last = np.asarray([r.generated[-1] & _MASK32 for r in reqs],
+                          np.uint32)
+        logits = self.model.logits_batch(rids, steps, last)
+        toks = sample_tokens_np(
+            logits,
+            np.asarray([r.sampling.temperature for r in reqs], np.float32),
+            np.asarray([r.sampling.top_k for r in reqs], np.int32),
+            np.asarray([r.sampling.top_p for r in reqs], np.float32),
+            np.asarray([r.sampling.seed & _MASK32 for r in reqs], np.uint32),
+            rids, steps)
+        for i, s in enumerate(decoding):
+            self.pos[s] += 1
+            sched._emit_decode_token(reqs[i], int(toks[i]))
+
+
+def tiny_paged_cfg():
+    """A reduced real config whose paged-KV surface the oracle reuses
+    (page-byte arithmetic, layout validation) — no params are ever
+    initialized for it."""
+    from repro.configs import get_config, reduced_config
+    return reduced_config(get_config("qwen3-1.7b"))
+
+
+# ---------------------------------------------------------------------------
+# Workload model
+# ---------------------------------------------------------------------------
+
+def _class_deadlines() -> Dict[str, Optional[float]]:
+    return {"premium": 200.0, "standard": 1000.0, "batch": None}
+
+
+def _class_tbt_deadlines() -> Dict[str, Optional[float]]:
+    return {"premium": 100.0, "standard": None, "batch": None}
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Knobs of the synthetic traffic model (see module docstring).
+
+    Every distribution is drawn from ONE seeded generator inside
+    :func:`generate_workload`, so (spec, seed) fixes the trace exactly.
+
+    requests: total turns to generate (sessions are truncated at the
+        boundary).
+    arrival_rate: mean REQUEST arrivals (turns) per second of virtual
+        time, before the diurnal envelope.  Session starts are paced at
+        ``arrival_rate / (1 + session_extra_turns)`` so the offered
+        request rate stays ``arrival_rate`` regardless of the turn mix
+        — capacity curves sweep a quantity the fleet actually serves.
+    burstiness: Gamma inter-arrival scale — 1.0 is Poisson; larger
+        values clump arrivals into bursts (variance grows, mean stays).
+    diurnal_amplitude / diurnal_period_s: sinusoidal rate envelope
+        ``rate * (1 + A sin(2πt/T))`` — a compressed "day".
+    session_extra_turns: mean FOLLOW-UP turns per session (geometric);
+        0 disables multi-turn traffic.
+    think_time_s: mean exponential pause between a session's turns.
+    num_prefixes / prefix_zipf / prefix_len: shared system-prompt
+        catalog size, Zipf exponent (> 1; lower = heavier head) and
+        tokens per prefix.
+    prompt_median / prompt_sigma: lognormal NEW prompt tokens per turn
+        (on top of the session context).
+    out_median / out_sigma: lognormal output-token budget per turn.
+    max_total_len: hard per-request ``prompt + output`` cap; session
+        context beyond it is truncated back to the shared prefix
+        (models the platform's context-window management).
+    class_mix: (premium, standard, batch) probabilities, sum 1.
+    ttft_deadline_ms / tbt_deadline_ms: per-class deadlines (None =
+        the class carries none).
+    stochastic_fraction: fraction of requests sampling at
+        ``temperature``/``top_p`` instead of greedy.
+    models: routing keys; each session picks one uniformly.
+    """
+    requests: int = 10_000
+    arrival_rate: float = 125.0
+    burstiness: float = 2.0
+    diurnal_amplitude: float = 0.4
+    diurnal_period_s: float = 300.0
+    session_extra_turns: float = 1.0
+    think_time_s: float = 0.5
+    num_prefixes: int = 32
+    prefix_zipf: float = 1.3
+    prefix_len: int = 24
+    prompt_median: int = 24
+    prompt_sigma: float = 0.7
+    out_median: int = 10
+    out_sigma: float = 0.6
+    max_total_len: int = 192
+    class_mix: Tuple[float, float, float] = (0.2, 0.5, 0.3)
+    ttft_deadline_ms: Dict[str, Optional[float]] = \
+        dataclasses.field(default_factory=_class_deadlines)
+    tbt_deadline_ms: Dict[str, Optional[float]] = \
+        dataclasses.field(default_factory=_class_tbt_deadlines)
+    stochastic_fraction: float = 0.15
+    temperature: float = 0.8
+    top_p: float = 0.95
+    vocab: int = 64
+    models: Tuple[str, ...] = ("m0",)
+
+    def __post_init__(self):
+        if self.requests < 1:
+            raise ValueError(f"requests must be >= 1, got {self.requests}")
+        if self.arrival_rate <= 0:
+            raise ValueError(
+                f"arrival_rate must be > 0, got {self.arrival_rate}")
+        if self.burstiness <= 0:
+            raise ValueError(
+                f"burstiness must be > 0, got {self.burstiness}")
+        if self.prefix_zipf <= 1.0:
+            raise ValueError(
+                f"prefix_zipf must be > 1, got {self.prefix_zipf}")
+        if abs(sum(self.class_mix) - 1.0) > 1e-6:
+            raise ValueError(
+                f"class_mix must sum to 1, got {self.class_mix}")
+        for d in (self.ttft_deadline_ms, self.tbt_deadline_ms):
+            for cls in d:
+                if cls not in PRIORITIES:
+                    raise ValueError(f"unknown class {cls!r} in deadlines")
+        if not self.models:
+            raise ValueError("models must name at least one routing key")
+        if self.max_total_len < self.prefix_len + 2:
+            raise ValueError(
+                f"max_total_len={self.max_total_len} cannot fit a "
+                f"{self.prefix_len}-token prefix plus one new token and "
+                "one output token")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalEvent:
+    """One request of the generated trace, in submission terms."""
+    t: float                        # virtual arrival time (seconds)
+    model: str
+    session_id: Optional[str]
+    prompt: np.ndarray              # (L,) int32
+    max_new_tokens: int
+    priority: str
+    deadline_ms: Optional[float]
+    tbt_deadline_ms: Optional[float]
+    sampling: SamplingParams
+
+
+def _lognormal_int(rng: np.random.Generator, median: float,
+                   sigma: float, lo: int, hi: int) -> int:
+    """Heavy-tailed integer draw: ``round(median * e^{N(0, sigma)})``
+    clipped to [lo, hi]."""
+    return int(min(hi, max(lo, round(median * math.exp(
+        rng.normal(0.0, sigma))))))
+
+
+def generate_workload(spec: WorkloadSpec, seed: int = 0,
+                      ) -> List[ArrivalEvent]:
+    """Draw the full arrival trace for ``spec`` — exactly
+    ``spec.requests`` events sorted by arrival time, all randomness
+    from one ``default_rng(seed)`` (the determinism contract).
+
+    Sessions arrive as a Gamma renewal process under the diurnal
+    envelope; each session carries 1 + Geometric(extra) turns spaced by
+    exponential think time, every turn's prompt extending the session
+    context (truncated back to its shared prefix past
+    ``max_total_len``)."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, spec.vocab, size=spec.prefix_len,
+                             dtype=np.int32)
+                for _ in range(spec.num_prefixes)]
+    classes = sorted(PRIORITIES, key=PRIORITIES.get)   # premium, std, batch
+    shape = 1.0 / spec.burstiness        # Gamma(k=1/b, θ=b): mean 1, CV²=b
+    events: List[ArrivalEvent] = []
+    t = 0.0
+    session = 0
+    while len(events) < spec.requests:
+        gap = rng.gamma(shape, spec.burstiness)
+        rate = spec.arrival_rate * (
+            1.0 + spec.diurnal_amplitude
+            * math.sin(2.0 * math.pi * t / spec.diurnal_period_s))
+        rate = max(rate, 0.05 * spec.arrival_rate)     # envelope floor
+        # arrival_rate counts requests; sessions start slower by the
+        # mean turns-per-session factor so offered req/s == arrival_rate
+        t += gap * (1.0 + spec.session_extra_turns) / rate
+        model = spec.models[int(rng.integers(len(spec.models)))]
+        priority = classes[int(rng.choice(3, p=list(spec.class_mix)))]
+        extra = spec.session_extra_turns
+        turns = 1 + (int(rng.geometric(1.0 / (1.0 + extra))) - 1
+                     if extra > 0 else 0)
+        pid = min(int(rng.zipf(spec.prefix_zipf)),
+                  spec.num_prefixes) - 1
+        sid = f"s{session}" if turns > 1 else None
+        session += 1
+        ctx = prefixes[pid]
+        tt = t
+        for _ in range(turns):
+            if len(events) >= spec.requests:
+                break
+            out = _lognormal_int(rng, spec.out_median, spec.out_sigma,
+                                 1, max(1, spec.max_total_len // 3))
+            if len(ctx) + 1 + out >= spec.max_total_len:
+                ctx = prefixes[pid]      # context-window truncation
+            room = spec.max_total_len - out - len(ctx)
+            new = _lognormal_int(rng, spec.prompt_median,
+                                 spec.prompt_sigma, 1, max(1, room))
+            prompt = np.concatenate(
+                [ctx, rng.integers(0, spec.vocab, size=new,
+                                   dtype=np.int32)])
+            if rng.random() < spec.stochastic_fraction:
+                sampling = SamplingParams(
+                    temperature=spec.temperature, top_p=spec.top_p,
+                    seed=int(rng.integers(2 ** 31)))
+            else:
+                sampling = SamplingParams()
+            events.append(ArrivalEvent(
+                t=tt, model=model, session_id=sid, prompt=prompt,
+                max_new_tokens=out, priority=priority,
+                deadline_ms=spec.ttft_deadline_ms.get(priority),
+                tbt_deadline_ms=spec.tbt_deadline_ms.get(priority),
+                sampling=sampling))
+            ctx = prompt                 # next turn extends this one
+            tt += float(rng.exponential(spec.think_time_s))
+    events.sort(key=lambda e: (e.t, e.session_id or ""))
+    return events
+
+
+def oracle_fleet(spec: WorkloadSpec, *, replicas: int = 1,
+                 total_pages: int = 256, page_size: int = 8,
+                 max_seats: int = 8, prefill_chunk: int = 32,
+                 selection: str = "slo-aware", admission: str = "slo",
+                 aging_ticks: int = 64,
+                 clock: Optional[VirtualClock] = None,
+                 record_trace: bool = False) -> ModelFleet:
+    """A :class:`~repro.runtime.router.ModelFleet` of oracle engines
+    sized for ``spec`` — one model entry per ``spec.models`` key,
+    ``replicas`` engines each, sharing ``total_pages`` under one
+    :class:`~repro.runtime.router.HostBudget`.  Traces default OFF
+    (memory at 10⁵⁻⁶ requests) and the clock defaults to a fresh
+    :class:`VirtualClock`."""
+    cfg = tiny_paged_cfg()
+    models = [FleetModel(name=m, cfg=cfg, params=None, replicas=replicas)
+              for m in spec.models]
+    return ModelFleet(
+        models, total_pages=total_pages, page_size=page_size,
+        max_seats=max_seats, max_seq_len=spec.max_total_len,
+        prefill_chunk=prefill_chunk, selection=selection,
+        admission=admission, aging_ticks=aging_ticks,
+        clock=clock if clock is not None else VirtualClock(),
+        record_trace=record_trace, policy_cls=OraclePolicy)
+
+
+# ---------------------------------------------------------------------------
+# CLI plumbing (shared by benchmarks/load_harness.py and launch/serve.py)
+# ---------------------------------------------------------------------------
+
+def add_workload_args(p: argparse.ArgumentParser) -> None:
+    """Register the ``--workload-*`` flags mapping 1:1 onto
+    :class:`WorkloadSpec` (documented in docs/serving.md)."""
+    g = p.add_argument_group("workload model")
+    g.add_argument("--workload-seed", type=int, default=0,
+                   help="RNG seed fixing the whole trace (default 0)")
+    g.add_argument("--workload-arrival-rate", type=float, default=125.0,
+                   help="mean request arrivals/s of virtual time "
+                        "(sessions pace slower by the mean turn count)")
+    g.add_argument("--workload-burstiness", type=float, default=2.0,
+                   help="Gamma inter-arrival burstiness (1.0 = Poisson)")
+    g.add_argument("--workload-diurnal-amplitude", type=float, default=0.4,
+                   help="sinusoidal rate envelope amplitude (0 = flat)")
+    g.add_argument("--workload-diurnal-period", type=float, default=300.0,
+                   help="rate envelope period in virtual seconds")
+    g.add_argument("--workload-session-turns", type=float, default=1.0,
+                   help="mean follow-up turns per session (geometric)")
+    g.add_argument("--workload-think-time", type=float, default=0.5,
+                   help="mean think time between session turns (s)")
+    g.add_argument("--workload-prefixes", type=int, default=32,
+                   help="shared system-prompt catalog size")
+    g.add_argument("--workload-zipf", type=float, default=1.3,
+                   help="Zipf exponent over the prefix catalog (> 1)")
+    g.add_argument("--workload-prompt-median", type=int, default=24,
+                   help="lognormal median of new prompt tokens per turn")
+    g.add_argument("--workload-out-median", type=int, default=10,
+                   help="lognormal median of output tokens per request")
+    g.add_argument("--workload-max-total-len", type=int, default=192,
+                   help="hard prompt+output cap per request")
+    g.add_argument("--workload-class-mix", type=str, default="0.2,0.5,0.3",
+                   help="premium,standard,batch probabilities (sum 1)")
+    g.add_argument("--workload-stochastic-fraction", type=float,
+                   default=0.15,
+                   help="fraction of requests sampling stochastically")
+    g.add_argument("--tbt-deadline-ms", type=float, default=100.0,
+                   help="premium per-token decode (TBT) deadline in ms")
+    g.add_argument("--ttft-deadline-ms", type=float, default=200.0,
+                   help="premium TTFT deadline in ms")
+
+
+def spec_from_args(args: argparse.Namespace, *,
+                   requests: int) -> WorkloadSpec:
+    """Build a :class:`WorkloadSpec` from :func:`add_workload_args`
+    flags plus an explicit request count."""
+    mix = tuple(float(x) for x in args.workload_class_mix.split(","))
+    if len(mix) != 3:
+        raise ValueError(
+            f"--workload-class-mix needs 3 comma-separated values, "
+            f"got {args.workload_class_mix!r}")
+    return WorkloadSpec(
+        requests=requests,
+        arrival_rate=args.workload_arrival_rate,
+        burstiness=args.workload_burstiness,
+        diurnal_amplitude=args.workload_diurnal_amplitude,
+        diurnal_period_s=args.workload_diurnal_period,
+        session_extra_turns=args.workload_session_turns,
+        think_time_s=args.workload_think_time,
+        num_prefixes=args.workload_prefixes,
+        prefix_zipf=args.workload_zipf,
+        prompt_median=args.workload_prompt_median,
+        out_median=args.workload_out_median,
+        max_total_len=args.workload_max_total_len,
+        class_mix=mix,  # type: ignore[arg-type]
+        stochastic_fraction=args.workload_stochastic_fraction,
+        ttft_deadline_ms={"premium": args.ttft_deadline_ms,
+                          "standard": 5 * args.ttft_deadline_ms,
+                          "batch": None},
+        tbt_deadline_ms={"premium": args.tbt_deadline_ms,
+                         "standard": None, "batch": None})

@@ -322,3 +322,110 @@ def test_per_class_metrics_snapshot(setup):
         assert c["peak_pages"] >= 1
     assert sum(c["preemptions"] for c in cls.values()) \
         == m["preemptions"]
+
+
+# -- TBT decode deadlines ----------------------------------------------------
+
+def test_tbt_tightens_rank_and_ages_past_standard():
+    """A batch request with a tight TBT deadline starts below a fresh
+    standard arrival, but aging lifts its class while the TBT due time
+    gives it a finite effective deadline — so once aged level with the
+    (undeadlined) standard request it strictly outranks it, despite
+    the higher rid."""
+    import dataclasses
+
+    @dataclasses.dataclass
+    class Stub:
+        rid: int
+        priority: str
+        deadline_ms: object
+        submit_tick: int
+        t_submit: float = 0.0
+        t_last_token: object = None
+        tbt_deadline_ms: object = None
+
+    pol = SLOAdmission(aging_ticks=4)
+    tbt_batch = Stub(7, "batch", None, submit_tick=0,
+                     tbt_deadline_ms=50.0)
+    standard = Stub(1, "standard", None, submit_tick=4)
+    assert pol.rank(tbt_batch, 3) > pol.rank(standard, 3)   # fresh: loses
+    tick = 4                                 # aged one class: now wins
+    assert pol.rank(tbt_batch, tick)[0] == PRIORITIES["standard"]
+    assert pol.rank(tbt_batch, tick) < pol.rank(standard, tick)
+    # the effective deadline follows the *next token*: a later
+    # t_last_token pushes it out
+    d0 = pol.rank(tbt_batch, tick)[1]
+    tbt_batch.t_last_token = 2.0
+    assert pol.rank(tbt_batch, tick)[1] == pytest.approx(2.0 + 0.050)
+    assert pol.rank(tbt_batch, tick)[1] > d0
+
+
+def test_tbt_effective_deadline_is_min_of_ttft_and_next_token():
+    """With both deadlines set, rank uses whichever due time is
+    earlier: TTFT before the first token, the TBT due time after a
+    token lands (when it is tighter)."""
+    import dataclasses
+
+    @dataclasses.dataclass
+    class Stub:
+        rid: int
+        priority: str
+        deadline_ms: object
+        submit_tick: int
+        t_submit: float = 0.0
+        t_last_token: object = None
+        tbt_deadline_ms: object = None
+
+    pol = SLOAdmission(aging_ticks=64)
+    req = Stub(0, "standard", 1000.0, submit_tick=0,
+               tbt_deadline_ms=40.0)
+    assert pol.rank(req, 0)[1] == pytest.approx(0.040)   # TBT tighter
+    req.tbt_deadline_ms = None
+    assert pol.rank(req, 0)[1] == pytest.approx(1.0)     # TTFT only
+
+
+def test_submit_rejects_bad_tbt_deadline(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=1, max_len=32)
+    with pytest.raises(ValueError, match="tbt_deadline_ms"):
+        eng.submit(np.arange(4, dtype=np.int32), tbt_deadline_ms=0)
+
+
+def test_victim_shields_tbt_deadlined_within_class(setup):
+    """Uniform class, one request TBT-deadlined: the undeadlined one
+    is evicted even though the historical youngest-first rule would
+    have picked the other — a decode-deadline-critical request is
+    never the preferred victim while an alternative exists."""
+    cfg, params = setup
+
+    def run(tbt_rid):
+        eng = PagedServingEngine(cfg, params, num_pages=7, **PKW)
+        for i in range(2):
+            mult = 3 if i == 0 else 7
+            eng.submit((np.arange(8, dtype=np.int32) * mult)
+                       % cfg.vocab_size, max_new_tokens=10,
+                       tbt_deadline_ms=(10_000.0 if i == tbt_rid
+                                        else None))
+        eng.run()
+        return eng
+
+    shielded = run(tbt_rid=1)
+    assert shielded.metrics.preemptions >= 1
+    assert preempted_rids(shielded) == {0}   # youngest-first would say 1
+    both_plain = run(tbt_rid=-1)
+    assert preempted_rids(both_plain) == {1}  # fallback: youngest first
+
+
+def test_pick_victim_no_tbt_matches_historical_key(setup):
+    """With no TBT deadlines present, pick_victim's ordering collapses
+    to the pre-TBT (class, rid) key on any victim set — the middle key
+    is constant."""
+    cfg, params = setup
+    eng = PagedServingEngine(cfg, params, num_pages=32, **PKW)
+    for prio in ("standard", "batch", "batch"):
+        eng.submit(np.arange(6, dtype=np.int32), max_new_tokens=4,
+                   priority=prio)
+    victims = list(eng.queue)
+    from repro.runtime.serving import priority_level
+    old_rule = max(victims, key=lambda r: (priority_level(r), r.rid))
+    assert eng.pick_victim(victims, victims[0]) is old_rule

@@ -1,0 +1,189 @@
+"""Workload model + oracle stub unit contracts.
+
+Pins the pieces the load harness's fidelity rests on: the numpy
+batched sampler is token-for-token identical to both the scalar host
+sampler and the jnp device sampler; the workload generator is
+seed-deterministic, validates its spec, and produces the advertised
+mixture shapes; the oracle model's logits are pure functions of
+(rid, step, last_token) so token streams replay exactly under any
+schedule.  See docs/benchmarks.md §"Workload 8"."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.runtime.sampler import (Sampler, SamplingParams,
+                                   sample_tokens, sample_tokens_np)
+from repro.runtime.workload import (OracleModel, VirtualClock,
+                                    WorkloadSpec, generate_workload)
+from repro.runtime.serving import PRIORITIES
+
+
+# -- sample_tokens_np equivalence -------------------------------------------
+
+def _random_batch(seed, B=24, V=96):
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(0, 4, (B, V)).astype(np.float32)
+    # mixed rows: greedy / temperature-only / top-k / top-p / both
+    temperature = np.where(rng.random(B) < 0.3, 0.0,
+                           rng.uniform(0.2, 1.5, B)).astype(np.float32)
+    top_k = np.where(rng.random(B) < 0.5, 0,
+                     rng.integers(1, V, B)).astype(np.int32)
+    top_p = np.where(rng.random(B) < 0.5, 1.0,
+                     rng.uniform(0.3, 0.99, B)).astype(np.float32)
+    # uint32 per the sample_tokens key contract (int64 would demote to
+    # int32 on the device and hash differently)
+    seeds = rng.integers(0, 2**31, B).astype(np.uint32)
+    rids = rng.integers(0, 10_000, B).astype(np.uint32)
+    steps = rng.integers(0, 512, B).astype(np.uint32)
+    return logits, temperature, top_k, top_p, seeds, rids, steps
+
+
+@pytest.mark.parametrize("case", range(3))
+def test_sample_tokens_np_matches_scalar_sampler(case):
+    """Every row of the batched numpy sampler equals the scalar
+    Sampler.sample call with the same (seed, rid, step) key — across
+    greedy, temperature, top-k and top-p rows."""
+    logits, temp, top_k, top_p, seeds, rids, steps = _random_batch(case)
+    got = sample_tokens_np(logits, temp, top_k, top_p,
+                           seeds, rids, steps)
+    s = Sampler()
+    for i in range(logits.shape[0]):
+        params = SamplingParams(temperature=float(temp[i]),
+                                top_k=int(top_k[i]),
+                                top_p=float(top_p[i]),
+                                seed=int(seeds[i]))
+        want = s.sample(logits[i], params, rid=int(rids[i]),
+                        step=int(steps[i]))
+        assert got[i] == want, f"row {i}: {got[i]} != {want}"
+
+
+def test_sample_tokens_np_matches_device_sampler():
+    """The numpy twin and the jnp device sampler agree on the same
+    batch — the oracle engine's streams are the streams a real engine
+    would sample from identical logits."""
+    logits, temp, top_k, top_p, seeds, rids, steps = _random_batch(7)
+    host = sample_tokens_np(logits, temp, top_k, top_p,
+                            seeds, rids, steps)
+    dev = np.asarray(sample_tokens(logits, temp, top_k, top_p,
+                                   seeds, rids, steps))
+    np.testing.assert_array_equal(host, dev)
+
+
+def test_sample_tokens_np_subset_invariant():
+    """Sampling a row subset returns the same tokens as the full
+    batch — per-row keys are (seed, rid, step), never batch position
+    (the mixed-batch fast path and the oracle's per-seat batching
+    both rely on this)."""
+    logits, temp, top_k, top_p, seeds, rids, steps = _random_batch(11)
+    full = sample_tokens_np(logits, temp, top_k, top_p,
+                            seeds, rids, steps)
+    idx = np.array([3, 0, 17, 9, 21])
+    sub = sample_tokens_np(logits[idx], temp[idx], top_k[idx],
+                           top_p[idx], seeds[idx], rids[idx], steps[idx])
+    np.testing.assert_array_equal(sub, full[idx])
+
+
+# -- oracle model -----------------------------------------------------------
+
+def test_oracle_logits_pure_and_schedule_free():
+    """Logit rows depend only on (rid, step, last) — batch shape,
+    call order and batch companions never change them."""
+    m = OracleModel(vocab=32)
+    row = m.logits_row(5, 3, 17)
+    batch = m.logits_batch(np.array([9, 5, 2], np.uint32),
+                           np.array([1, 3, 0], np.uint32),
+                           np.array([4, 17, 30], np.uint32))
+    np.testing.assert_array_equal(batch[1], row)
+    np.testing.assert_array_equal(m.logits_row(5, 3, 17), row)
+    assert row.shape == (32,) and row.dtype == np.float32
+    # distinct keys decorrelate
+    assert not np.array_equal(m.logits_row(5, 3, 18), row)
+    with pytest.raises(ValueError):
+        OracleModel(vocab=1)
+
+
+# -- virtual clock ----------------------------------------------------------
+
+def test_virtual_clock_monotone():
+    c = VirtualClock()
+    assert c() == 0.0
+    c.advance(1.5)
+    c.advance(0.0)
+    assert c() == 1.5
+    with pytest.raises(ValueError):
+        c.advance(-0.1)
+
+
+# -- workload generator -----------------------------------------------------
+
+def _event_key(e):
+    return (e.t, e.model, e.session_id, tuple(e.prompt),
+            e.max_new_tokens, e.priority, e.deadline_ms,
+            e.tbt_deadline_ms, e.sampling)
+
+
+def test_generate_workload_deterministic_and_sorted():
+    spec = WorkloadSpec(requests=500)
+    a = generate_workload(spec, seed=3)
+    b = generate_workload(spec, seed=3)
+    assert [_event_key(e) for e in a] == [_event_key(e) for e in b]
+    assert len(a) == 500
+    assert all(x.t <= y.t for x, y in zip(a, a[1:]))
+    c = generate_workload(spec, seed=4)
+    assert [_event_key(e) for e in c] != [_event_key(e) for e in a]
+
+
+def test_generate_workload_mixture_shapes():
+    """Class mix lands near the spec, prompts/outputs respect bounds,
+    session turns reuse the session id with growing context."""
+    spec = WorkloadSpec(requests=3000, class_mix=(0.5, 0.3, 0.2))
+    ev = generate_workload(spec, seed=0)
+    frac = {c: sum(1 for e in ev if e.priority == c) / len(ev)
+            for c in PRIORITIES}
+    assert abs(frac["premium"] - 0.5) < 0.05
+    assert abs(frac["batch"] - 0.2) < 0.05
+    for e in ev:
+        assert 1 <= e.max_new_tokens
+        assert len(e.prompt) + e.max_new_tokens <= spec.max_total_len
+    sessions = {}
+    for e in ev:
+        if e.session_id is not None:
+            sessions.setdefault(e.session_id, []).append(e)
+    multi = [v for v in sessions.values() if len(v) > 1]
+    assert multi, "no multi-turn sessions generated"
+    grew = 0
+    for turns in multi:
+        for a, b in zip(turns, turns[1:]):
+            assert b.t > a.t                       # think time elapsed
+            # context grows turn over turn, except across a
+            # context-window truncation (reset to the shared prefix)
+            if len(b.prompt) > len(a.prompt):
+                grew += 1
+                np.testing.assert_array_equal(
+                    b.prompt[:len(a.prompt)], a.prompt)
+    assert grew > len(multi) // 2
+
+
+def test_workload_spec_validation():
+    with pytest.raises(ValueError, match="requests"):
+        WorkloadSpec(requests=0)
+    with pytest.raises(ValueError, match="class_mix"):
+        WorkloadSpec(class_mix=(0.9, 0.2, 0.2))
+    with pytest.raises(ValueError, match="zipf"):
+        WorkloadSpec(prefix_zipf=1.0)
+    with pytest.raises(ValueError, match="max_total_len"):
+        WorkloadSpec(max_total_len=10, prefix_len=24)
+
+
+def test_workload_diurnal_envelope_modulates_rate():
+    """With a strong diurnal swing, arrival density varies across the
+    period — the first half-period (rate above base) packs more
+    arrivals than the second (rate below base)."""
+    spec = WorkloadSpec(requests=4000, arrival_rate=50.0,
+                        diurnal_amplitude=0.9, diurnal_period_s=100.0,
+                        session_extra_turns=0.0)
+    ev = generate_workload(spec, seed=1)
+    in_phase = [e.t % 100.0 for e in ev]
+    first_half = sum(1 for t in in_phase if t < 50.0)
+    assert first_half / len(ev) > 0.6
