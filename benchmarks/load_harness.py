@@ -44,6 +44,7 @@ from collections import Counter
 from typing import Dict, List, Optional, Sequence
 
 from repro.runtime.router import ModelFleet
+from repro.runtime.telemetry import Telemetry
 from repro.runtime.workload import (ArrivalEvent, VirtualClock,
                                     WorkloadSpec, add_workload_args,
                                     generate_workload, oracle_fleet,
@@ -182,11 +183,26 @@ def drive_workload(fleet: ModelFleet, events: Sequence[ArrivalEvent],
     grows the backlog without bound and each tick's admission scan is
     O(backlog), so erroring beats grinding for minutes.
 
+    When the fleet carries a :class:`~repro.runtime.telemetry.Telemetry`
+    instance, the FIRST invariant violation (and either RuntimeError)
+    dumps a postmortem JSON — flight-recorder ring + every engine's
+    queue/seats/BlockManager partition + HostBudget grants — before the
+    run continues or raises; CI uploads it as an artifact on failure.
+
     Raises:
       RuntimeError: ``max_ticks`` exceeded (a scheduling stall) or
         ``max_backlog`` exceeded (an unstable offered load)."""
     t_wall = time.perf_counter()
     engines = [eng for _, _, eng in fleet._engines()]
+    tel = getattr(fleet, "telemetry", None)
+
+    def _dump(reason: str) -> None:
+        if tel is not None:
+            tel.write_postmortem(
+                reason,
+                engines={f"{n}/{i}": e for n, i, e in fleet._engines()},
+                budget=fleet.budget.usage())
+
     violations: List[str] = []
     submitted: List[int] = []
     t0_virtual = clock.now
@@ -217,20 +233,31 @@ def drive_workload(fleet: ModelFleet, events: Sequence[ArrivalEvent],
         clock.advance(dt)
         ticks += 1
         if invariant_interval and ticks % invariant_interval == 0:
-            violations.extend(check_invariants(fleet))
+            errs = check_invariants(fleet)
+            if errs and not violations:
+                _dump("invariant violation (tick cadence): "
+                      + "; ".join(errs[:5]))
+            violations.extend(errs)
             if max_backlog is not None:
                 backlog = sum(len(eng.queue) for eng in engines)
                 if backlog > max_backlog:
-                    raise RuntimeError(
-                        f"fleet backlog {backlog} exceeds "
-                        f"max_backlog={max_backlog} — the offered load "
-                        "is unstable at this capacity")
+                    msg = (f"fleet backlog {backlog} exceeds "
+                           f"max_backlog={max_backlog} — the offered "
+                           "load is unstable at this capacity")
+                    _dump(msg)
+                    raise RuntimeError(msg)
         if ticks > max_ticks:
-            raise RuntimeError(
-                f"drive_workload exceeded {max_ticks} ticks with "
-                f"{len(events) - i} arrivals pending — scheduling stall")
-    violations.extend(check_invariants(fleet))
-    violations.extend(check_conservation(fleet, submitted))
+            msg = (f"drive_workload exceeded {max_ticks} ticks with "
+                   f"{len(events) - i} arrivals pending — scheduling "
+                   "stall")
+            _dump(msg)
+            raise RuntimeError(msg)
+    end_errs = (check_invariants(fleet)
+                + check_conservation(fleet, submitted))
+    if end_errs and not violations:
+        _dump("end-of-run invariant violation: "
+              + "; ".join(end_errs[:5]))
+    violations.extend(end_errs)
     snap = fleet.metrics_snapshot()["fleet"]
     return DriveResult(
         requests=len(events), ticks=ticks,
@@ -271,14 +298,17 @@ def _meets(classes: Dict[str, Dict[str, float]], cls: str,
 
 
 def _run_cell(spec: WorkloadSpec, seed: int, *, pages: int,
-              replicas: int, args) -> DriveResult:
-    """One sweep cell: fresh fleet, fresh clock, same-seed trace."""
+              replicas: int, args,
+              telemetry: Optional[Telemetry] = None) -> DriveResult:
+    """One sweep cell: fresh fleet, fresh clock, same-seed trace.
+    ``telemetry`` is shared across cells (the ring is bounded), so a
+    failing cell's postmortem also shows the tail of the run before."""
     clock = VirtualClock()
     fleet = oracle_fleet(
         spec, replicas=replicas, total_pages=pages,
         page_size=args.page_size, max_seats=args.max_seats,
         prefill_chunk=args.prefill_chunk, selection=args.selection,
-        admission=args.admission, clock=clock)
+        admission=args.admission, clock=clock, telemetry=telemetry)
     events = generate_workload(spec, seed)
     return drive_workload(
         fleet, events, clock,
@@ -301,10 +331,14 @@ def _cell_record(load: float, pages: int, replicas: int,
     }
 
 
-def run_capacity_sweep(args) -> Dict[str, object]:
+def run_capacity_sweep(args,
+                       telemetry: Optional[Telemetry] = None
+                       ) -> Dict[str, object]:
     """The full benchmark: sweep offered load × resource ladders, find
     per-class minimum resources, soak the operating point, self-check
-    determinism.  Returns the BENCH_capacity.json payload."""
+    determinism.  Returns the BENCH_capacity.json payload.
+    ``telemetry`` (optional) attaches one flight recorder to every
+    cell's fleet so failures dump a postmortem JSON."""
     loads = [float(x) for x in args.loads.split(",")]
     pages_ladder = [int(x) for x in args.pages_ladder.split(",")]
     replicas_ladder = [int(x) for x in args.replicas_ladder.split(",")]
@@ -336,7 +370,8 @@ def run_capacity_sweep(args) -> Dict[str, object]:
         met_pages: Dict[str, Optional[int]] = {c: None for c in classes}
         for pages in pages_ladder:
             res = _run_cell(spec, args.workload_seed, pages=pages,
-                            replicas=args.replicas, args=args)
+                            replicas=args.replicas, args=args,
+                            telemetry=telemetry)
             violations += len(res.invariant_violations)
             cells.append(_cell_record(load, pages, args.replicas, res))
             for cls in classes:
@@ -348,7 +383,8 @@ def run_capacity_sweep(args) -> Dict[str, object]:
         met_reps: Dict[str, Optional[int]] = {c: None for c in classes}
         for replicas in replicas_ladder:
             res = _run_cell(spec, args.workload_seed, pages=args.pages,
-                            replicas=replicas, args=args)
+                            replicas=replicas, args=args,
+                            telemetry=telemetry)
             violations += len(res.invariant_violations)
             cells.append(_cell_record(load, args.pages, replicas, res))
             if replicas == args.replicas:
@@ -377,16 +413,19 @@ def run_capacity_sweep(args) -> Dict[str, object]:
         base, requests=soak_requests,
         arrival_rate=base.arrival_rate * op_load)
     soak = _run_cell(soak_spec, args.workload_seed, pages=args.pages,
-                     replicas=args.replicas, args=args)
+                     replicas=args.replicas, args=args,
+                     telemetry=telemetry)
     violations += len(soak.invariant_violations)
 
     # determinism self-check: same seed, same cell, twice
     det_spec = dataclasses.replace(base, requests=min(2000,
                                                       cell_requests))
     d1 = _run_cell(det_spec, args.workload_seed, pages=args.pages,
-                   replicas=args.replicas, args=args)
+                   replicas=args.replicas, args=args,
+                   telemetry=telemetry)
     d2 = _run_cell(det_spec, args.workload_seed, pages=args.pages,
-                   replicas=args.replicas, args=args)
+                   replicas=args.replicas, args=args,
+                   telemetry=telemetry)
     deterministic = (
         d1.token_digest == d2.token_digest
         and d1.classes == d2.classes and d1.ticks == d2.ticks
@@ -483,6 +522,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                    help="replica counts swept per load")
     p.add_argument("--invariant-interval", type=int, default=16,
                    help="check invariants every N ticks (0 = ends only)")
+    p.add_argument("--flight-recorder", type=int, default=4096,
+                   metavar="N",
+                   help="ring capacity of the attached flight recorder "
+                        "(0 disables telemetry entirely); on an "
+                        "invariant violation, stall or backlog blowup "
+                        "the ring + full fleet state dump to "
+                        "--postmortem")
+    p.add_argument("--postmortem", default="postmortem.json",
+                   help="failure postmortem JSON path (CI uploads it "
+                        "as an artifact when the job fails)")
     p.add_argument("--out", default="BENCH_capacity.json")
     p.add_argument("--summary", action="store_true",
                    help="print the markdown table from --out and exit")
@@ -494,8 +543,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print_summary(json.load(f))
         return 0
 
+    telemetry = None
+    if args.flight_recorder > 0:
+        telemetry = Telemetry(ring=args.flight_recorder,
+                              postmortem_path=args.postmortem)
     t0 = time.perf_counter()
-    result = run_capacity_sweep(args)
+    result = run_capacity_sweep(args, telemetry=telemetry)
     result["harness_wall_s"] = round(time.perf_counter() - t0, 2)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)

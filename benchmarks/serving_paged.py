@@ -82,6 +82,17 @@ random-init model the remaining positions are near-ties that any lossy
 storage resolves by coin flip (see docs/benchmarks.md); the
 unconditional agreement is recorded alongside.
 
+Workload 9 (telemetry overhead): the fused-tick steady state of
+workload 6 at one seat count, run twice — telemetry off
+(``telemetry=None``) vs on (flight recorder + SLO burn monitor, the
+always-on plane; the opt-in tick profiler pays for its own
+perf_counter calls and sits outside the gate).  The telemetry plane
+must be effectively free:
+``tokens_per_s_ratio`` = on/off is gated ``>= --telemetry-gate``
+(default 0.98) in CI, and outputs must be token-identical (telemetry
+observes the schedule, never perturbs it — tests/test_telemetry.py
+pins the trace-level version of the same claim).
+
 Prints ``name,tokens_per_s,detail`` CSV rows plus ratio lines, and
 writes tokens/s, TTFT, page utilization and prefix-hit rate for every
 engine run to ``--json-out`` (default BENCH_serving.json).  Run:
@@ -106,6 +117,7 @@ from repro.models import model as M
 from repro.parallel.sharding import SINGLE_DEVICE_RULES
 from repro.runtime.router import FleetModel, ModelFleet
 from repro.runtime.serving import PagedServingEngine, ServingEngine
+from repro.runtime.telemetry import Telemetry
 
 
 def make_workload(n: int, *, seed: int = 0, short_frac: float = 0.75,
@@ -793,6 +805,91 @@ def bench_tick_scaling(cfg, params, args):
             "token_identical": token_identical}
 
 
+def bench_telemetry_overhead(cfg, params, args):
+    """Telemetry-on vs telemetry-off throughput on the fused tick
+    (workload 9).
+
+    Both sides run the workload-6 steady state — ``--telemetry-seats``
+    equal-length single-page prompts decoding ``--telemetry-gen``
+    tokens each through the fused one-dispatch tick, prefix cache off —
+    differing ONLY in whether a :class:`Telemetry` plane (flight
+    recorder + SLO burn monitor — the always-on serving configuration;
+    the opt-in ``--profile-ticks`` diagnostic pays for its own
+    perf_counter calls and is deliberately outside this gate) is
+    attached.  Per-engine jit warmup is excluded and
+    the median of ``--telemetry-reps`` interleaved reps is scored.
+    ``tokens_per_s_ratio`` = on/off is gated ``>= --telemetry-gate``;
+    outputs must be token-identical (telemetry never touches the
+    schedule or the device — the emit path is declared hot in
+    hotpaths.toml so repro-lint rejects implicit syncs there)."""
+    ps = args.page_size
+    B = args.telemetry_seats
+    gen = args.telemetry_gen
+    max_seq = ps + gen
+    n_tables = -(-max_seq // ps)
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, 250, ps).astype(np.int32)
+               for _ in range(B)]
+    print(f"# workload9: {B} seats, {gen} tokens per request, telemetry "
+          f"on vs off, median of {args.telemetry_reps} interleaved reps")
+
+    def one_rep(tel_on):
+        tel = Telemetry(ring=4096) if tel_on else None
+        eng = PagedServingEngine(
+            cfg, params, page_size=ps, num_pages=1 + (B + 1) * n_tables,
+            max_seats=B, max_seq_len=max_seq, prefill_chunk=ps,
+            prefix_cache=False, fused=True, telemetry=tel)
+        wp = np.full(ps, 251, np.int32)
+        for _ in range(2):                  # jit warmup: prefill chunk +
+            eng.submit(wp, max_new_tokens=2)  # fused decode tick
+            eng.run()
+        n_warm = len(eng.finished)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=gen)
+        t0 = time.perf_counter()
+        eng.run()
+        wall = time.perf_counter() - t0
+        done = eng.finished[n_warm:]
+        toks = sum(len(r.generated) for r in done)
+        rec = {"telemetry": tel_on, "tokens": toks, "wall_s": wall,
+               "tokens_per_s": toks / max(wall, 1e-9)}
+        if tel is not None:
+            rec["events_recorded"] = tel.recorder.total
+        outs = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+        return rec, outs
+
+    reps = {False: [], True: []}
+    for _ in range(args.telemetry_reps):    # interleave: CPU noise hits
+        for tel_on in (False, True):        # both configurations equally
+            reps[tel_on].append(one_rep(tel_on))
+    recs, outputs = {}, {}
+    for tel_on in (False, True):
+        runs = sorted(reps[tel_on], key=lambda ro: ro[0]["tokens_per_s"])
+        rec, outs = runs[len(runs) // 2]                 # median rep
+        rec["tokens_per_s_reps"] = [r[0]["tokens_per_s"]
+                                    for r in reps[tel_on]]
+        assert all(o == outs for _, o in reps[tel_on]), \
+            f"nondeterministic outputs (telemetry={tel_on})"
+        recs[tel_on], outputs[tel_on] = rec, outs
+        name = "telemetry_on" if tel_on else "telemetry_off"
+        print(f"{name},{rec['tokens_per_s']:.2f},"
+              f"tokens={rec['tokens']};wall_s={rec['wall_s']:.3f}")
+
+    token_identical = outputs[True] == outputs[False]
+    assert token_identical, \
+        "attaching telemetry changed the generated tokens"
+    ratio = recs[True]["tokens_per_s"] / \
+        max(recs[False]["tokens_per_s"], 1e-9)
+    print(f"ratio,{ratio:.3f},telemetry_on_vs_off_tokens_per_s")
+    assert ratio >= args.telemetry_gate, \
+        (f"telemetry-on throughput is {ratio:.3f}x telemetry-off "
+         f"(gate {args.telemetry_gate}): the observability plane is "
+         "taxing the hot path")
+    return {"seats": B, "gen": gen, "off": recs[False], "on": recs[True],
+            "tokens_per_s_ratio": ratio, "gate": args.telemetry_gate,
+            "token_identical": token_identical}
+
+
 def bench_kv_quant(cfg, params, args):
     """Quantized fp8 KV pages vs full-precision f32 pages at equal BYTE
     budget on the oversubscribed early-eos stream (workload 7).
@@ -1091,6 +1188,17 @@ def main():
     ap.add_argument("--kvq-agree-steps", type=int, default=32,
                     help="teacher-forced decode steps for the greedy "
                          "agreement measurement (workload 7)")
+    ap.add_argument("--telemetry-seats", type=int, default=4,
+                    help="active-seat count for the telemetry-overhead "
+                         "bench (workload 9)")
+    ap.add_argument("--telemetry-gen", type=int, default=24,
+                    help="decode tokens per request (workload 9)")
+    ap.add_argument("--telemetry-reps", type=int, default=3,
+                    help="interleaved repetitions per configuration; "
+                         "the median tokens/s is scored")
+    ap.add_argument("--telemetry-gate", type=float, default=0.98,
+                    help="min allowed tokens/s ratio telemetry-on / "
+                         "telemetry-off (workload 9 CI gate)")
     ap.add_argument("--json-out", default="BENCH_serving.json")
     args = ap.parse_args()
 
@@ -1105,13 +1213,15 @@ def main():
     fleet = bench_fleet(cfg, params, args)
     tick = bench_tick_scaling(cfg, params, args)
     kvq = bench_kv_quant(cfg, params, args)
+    telemetry = bench_telemetry_overhead(cfg, params, args)
 
     out = {"arch": args.arch, "seed": args.seed,
            "budget_tokens": args.budget_tokens,
            "page_size": args.page_size,
            "skewed": skewed, "shared_prefix": shared,
            "lazy_growth": lazy, "slo_classes": slo, "fleet": fleet,
-           "tick_scaling": tick, "kv_quant": kvq}
+           "tick_scaling": tick, "kv_quant": kvq,
+           "telemetry_overhead": telemetry}
     with open(args.json_out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"# wrote {args.json_out}")

@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Render a flight-recorder or Perfetto dump as a per-request timeline.
+
+Stdlib-only companion to :mod:`repro.runtime.telemetry` for when a
+browser (ui.perfetto.dev) is not at hand — point it at any of:
+
+* a flight-recorder snapshot or postmortem JSON (top-level ``events``
+  list, or nested under ``flight_recorder``; postmortems written by
+  ``Telemetry.write_postmortem`` are the latter),
+* a Chrome trace-event JSON written by ``write_perfetto`` /
+  ``--trace-export`` (top-level ``traceEvents``),
+
+and it prints one timeline per request id: the span phases
+(queued / prefill / replay / decode) with durations, plus instant
+events (preempt, deadline_miss, tbt_miss, ...) in order::
+
+  PYTHONPATH=src python scripts/trace_view.py postmortem.json
+  python scripts/trace_view.py trace.json --rid 7 --format md
+
+``--format md`` emits a markdown table per request for pasting into an
+issue; the default is aligned plain text.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.runtime.telemetry import build_spans, event_from_dict  # noqa: E402
+
+
+def load_trace(path: str) -> Tuple[List[dict], List[dict]]:
+    """Return (spans, instants) from any supported dump format."""
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        raise SystemExit(f"{path}: expected a JSON object at top level")
+    if "traceEvents" in doc:
+        return _from_perfetto(doc["traceEvents"])
+    events = doc.get("events")
+    if events is None:
+        events = doc.get("flight_recorder", {}).get("events")
+    if events is None:
+        raise SystemExit(f"{path}: no 'events', 'flight_recorder.events' "
+                         "or 'traceEvents' key — not a telemetry dump")
+    built = build_spans([event_from_dict(d) for d in events])
+    return built["spans"], built["instants"]
+
+
+def _from_perfetto(trace_events: List[dict]) -> Tuple[List[dict], List[dict]]:
+    """Recover span/instant dicts from Chrome trace-event JSON."""
+    pid_engine: Dict[int, str] = {}
+    for ev in trace_events:
+        if ev.get("ph") == "M" and ev.get("name") == "process_name":
+            pid_engine[ev["pid"]] = ev.get("args", {}).get("name", "engine")
+    spans, instants = [], []
+    for ev in trace_events:
+        ph = ev.get("ph")
+        engine = pid_engine.get(ev.get("pid"), "engine")
+        if ph == "X":
+            tid = ev.get("tid", 0)
+            spans.append({
+                "engine": engine,
+                "rid": ev.get("args", {}).get("rid", -1),
+                "name": ev["name"],
+                "t0": ev["ts"] / 1e6,
+                "t1": (ev["ts"] + ev.get("dur", 0)) / 1e6,
+                "seat": None if tid == 0 else tid - 1,
+            })
+        elif ph in ("i", "I"):
+            args = dict(ev.get("args", {}))
+            instants.append({
+                "engine": engine,
+                "rid": args.pop("rid", -1),
+                "kind": ev["name"],
+                "t": ev["ts"] / 1e6,
+                "seat": None,
+                "attrs": args,
+            })
+    return spans, instants
+
+
+def _fmt_s(dt: float) -> str:
+    if dt >= 1.0:
+        return f"{dt:.3f}s"
+    return f"{dt * 1e3:.3f}ms"
+
+
+def render(spans: List[dict], instants: List[dict], *, rid=None,
+           fmt: str = "text") -> str:
+    """Render per-rid timelines; returns the full report string."""
+    by_rid: Dict[Tuple[str, int], List[dict]] = {}
+    for sp in spans:
+        if sp["rid"] < 0 or (rid is not None and sp["rid"] != rid):
+            continue
+        by_rid.setdefault((sp["engine"], sp["rid"]), []).append(sp)
+    inst_by_rid: Dict[Tuple[str, int], List[dict]] = {}
+    for ins in instants:
+        if ins["rid"] < 0 or (rid is not None and ins["rid"] != rid):
+            continue
+        inst_by_rid.setdefault((ins["engine"], ins["rid"]), []).append(ins)
+
+    out: List[str] = []
+    for key in sorted(by_rid, key=lambda k: (k[0], k[1])):
+        engine, r = key
+        rows = sorted(by_rid[key], key=lambda s: s["t0"])
+        t_base = rows[0]["t0"]
+        marks = sorted(inst_by_rid.get(key, []), key=lambda i: i["t"])
+        if fmt == "md":
+            out.append(f"### rid {r} ({engine})")
+            out.append("")
+            out.append("| phase | start | duration | seat |")
+            out.append("|---|---|---|---|")
+            for sp in rows:
+                seat = "-" if sp["seat"] is None else str(sp["seat"])
+                out.append(f"| {sp['name']} | +{_fmt_s(sp['t0'] - t_base)} "
+                           f"| {_fmt_s(sp['t1'] - sp['t0'])} | {seat} |")
+            for ins in marks:
+                out.append(f"| *{ins['kind']}* "
+                           f"| +{_fmt_s(ins['t'] - t_base)} | - | - |")
+            out.append("")
+        else:
+            out.append(f"rid {r} ({engine})")
+            for sp in rows:
+                seat = " " if sp["seat"] is None else str(sp["seat"])
+                out.append(f"  {sp['name']:<10s} +{_fmt_s(sp['t0'] - t_base):>10s}"
+                           f"  dur {_fmt_s(sp['t1'] - sp['t0']):>10s}  seat {seat}")
+            for ins in marks:
+                out.append(f"  ! {ins['kind']:<12s} "
+                           f"+{_fmt_s(ins['t'] - t_base):>10s}")
+    if not out:
+        out.append("no request spans found"
+                   + ("" if rid is None else f" for rid {rid}"))
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="flight-recorder / postmortem / Perfetto JSON")
+    ap.add_argument("--rid", type=int, default=None,
+                    help="only show this request id")
+    ap.add_argument("--format", choices=("text", "md"), default="text")
+    args = ap.parse_args(argv)
+    spans, instants = load_trace(args.trace)
+    try:
+        print(render(spans, instants, rid=args.rid, fmt=args.format))
+    except BrokenPipeError:                 # | head closed the pipe
+        sys.stderr.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

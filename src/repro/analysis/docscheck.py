@@ -16,7 +16,7 @@ from typing import List
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 EXTERNAL = ("http://", "https://", "mailto:")
 REQUIRED_README_LINKS = ("docs/serving.md", "docs/benchmarks.md",
-                         "docs/static_analysis.md")
+                         "docs/static_analysis.md", "docs/observability.md")
 
 
 def md_files(root: Path) -> List[Path]:

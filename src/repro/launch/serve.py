@@ -52,6 +52,8 @@ from repro.parallel.sharding import rules_for_mesh, DEFAULT_RULES
 from repro.runtime.router import FleetModel, ModelFleet, parse_models_spec
 from repro.runtime.sampler import Sampler, SamplingParams
 from repro.runtime.serving import PagedServingEngine
+from repro.runtime.telemetry import (MetricsServer, Telemetry,
+                                     prometheus_text, write_perfetto)
 
 
 # ---------------------------------------------------------------------------
@@ -205,7 +207,9 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
                 tbt_deadline_ms: Optional[float] = None,
                 admission: str = "fcfs", aging_ticks: int = 64,
                 kv_dtype: Optional[str] = None,
-                class_precision: Optional[Dict[str, str]] = None):
+                class_precision: Optional[Dict[str, str]] = None,
+                telemetry: Optional[Telemetry] = None,
+                metrics_port: Optional[int] = None):
     """Drive the paged engine over a request stream.
 
     ``max_seq_len`` bounds prompt + generation per request and defaults
@@ -225,7 +229,12 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
     anti-starvation bound); ``priority`` (premium/standard/batch) and
     ``deadline_ms`` (TTFT deadline) are applied to every submitted
     request — one-class streams are plumbing demos; see
-    benchmarks/serving_paged.py workload 4 for a mixed-class stream."""
+    benchmarks/serving_paged.py workload 4 for a mixed-class stream.
+
+    ``telemetry`` attaches the observability plane (flight recorder /
+    tick profiler — see docs/observability.md); ``metrics_port`` serves
+    Prometheus text exposition of the live engine metrics on
+    127.0.0.1 for the duration of the run (0 = ephemeral port)."""
     if max_seq_len is None:
         max_seq_len = (prompt_len if prompt_len else 3 * page_size) + gen
     if prompt_len is not None and prompt_len + gen > max_seq_len:
@@ -249,7 +258,8 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
                              lazy_pages=lazy_pages, watermark=watermark,
                              admission=admission, aging_ticks=aging_ticks,
                              kv_dtype=kv_dtype,
-                             class_precision=class_precision)
+                             class_precision=class_precision,
+                             telemetry=telemetry)
     rng = np.random.default_rng(seed)
     for _ in range(requests):
         plen = (prompt_len if prompt_len
@@ -259,7 +269,17 @@ def serve_paged(arch: str, *, requests: int = 8, gen: int = 16,
                    eos_id=eos_id, sampling=sampling,
                    priority=priority, deadline_ms=deadline_ms,
                    tbt_deadline_ms=tbt_deadline_ms)
-    done = eng.run()
+    server = None
+    if metrics_port is not None:
+        server = MetricsServer(
+            lambda: prometheus_text({arch: eng.metrics}),
+            port=metrics_port)
+        print(f"[serve.paged] metrics: {server.url}")
+    try:
+        done = eng.run()
+    finally:
+        if server is not None:
+            server.close()
     return {"finished": done, "metrics": eng.metrics.snapshot()}
 
 
@@ -279,7 +299,9 @@ def serve_fleet(models, *, requests: int = 12, gen: int = 8,
                 admission: str = "fcfs", aging_ticks: int = 64,
                 selection: str = "least-loaded",
                 kv_dtype: Optional[str] = None,
-                class_precision: Optional[Dict[str, str]] = None):
+                class_precision: Optional[Dict[str, str]] = None,
+                telemetry: Optional[Telemetry] = None,
+                metrics_port: Optional[int] = None):
     """Drive a multi-model fleet over one mixed request stream.
 
     ``models`` is a ``--models``-style spec string
@@ -296,7 +318,12 @@ def serve_fleet(models, *, requests: int = 12, gen: int = 8,
     per-request outputs match dedicated solo engines.  Returns the
     finished requests plus the fleet metrics snapshot (per-model
     tokens/s, TTFT, prefix hits, preemptions, SLO classes, budget
-    accounting)."""
+    accounting).
+
+    ``telemetry`` attaches one shared observability plane (flight
+    recorder tagged per ``model/replica`` engine, ``fleet_tick``
+    heartbeat counters — docs/observability.md); ``metrics_port``
+    serves per-replica Prometheus exposition during the run."""
     if isinstance(models, str):
         try:
             models = parse_models_spec(models)
@@ -335,7 +362,8 @@ def serve_fleet(models, *, requests: int = 12, gen: int = 8,
                        prefix_cache=prefix_cache, lazy_pages=lazy_pages,
                        watermark=watermark, admission=admission,
                        aging_ticks=aging_ticks,
-                       class_precision=class_precision)
+                       class_precision=class_precision,
+                       telemetry=telemetry)
     rng = np.random.default_rng(seed)
     for i in range(requests):
         name = models[i % len(models)][0]
@@ -349,7 +377,19 @@ def serve_fleet(models, *, requests: int = 12, gen: int = 8,
                      eos_id=eos_id, sampling=sampling,
                      priority=priority, deadline_ms=deadline_ms,
                      tbt_deadline_ms=tbt_deadline_ms)
-    done = fleet.run()
+    server = None
+    if metrics_port is not None:
+        server = MetricsServer(
+            lambda: prometheus_text(
+                {f"{n}/{i}": e.metrics
+                 for n, i, e in fleet._engines()}),
+            port=metrics_port)
+        print(f"[serve.fleet] metrics: {server.url}")
+    try:
+        done = fleet.run()
+    finally:
+        if server is not None:
+            server.close()
     return {"finished": done, "metrics": fleet.metrics_snapshot()}
 
 
@@ -416,6 +456,70 @@ def parse_class_precision(spec: str) -> Dict[str, str]:
                 f"{part!r}; expected one of {', '.join(KV_DTYPES)}")
         out[cls] = dt
     return out
+
+
+def add_telemetry_args(ap: argparse.ArgumentParser) -> None:
+    """Shared observability flags (paged engine and fleet modes) — see
+    docs/observability.md for the workflows behind them."""
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve Prometheus text exposition of the live "
+                         "engine metrics on 127.0.0.1:PORT for the "
+                         "duration of the run (0 = ephemeral port, "
+                         "printed at startup)")
+    ap.add_argument("--flight-recorder", type=int, default=0,
+                    metavar="N",
+                    help="keep the last N structured trace events in a "
+                         "ring buffer; a scheduler stall dumps them "
+                         "plus a full engine-state snapshot as "
+                         "postmortem JSON (0 = off unless another "
+                         "telemetry flag turns telemetry on)")
+    ap.add_argument("--trace-export", default=None, metavar="PATH",
+                    help="after the run, write the recorded events as "
+                         "Chrome trace-event JSON (open in "
+                         "https://ui.perfetto.dev — one track per "
+                         "engine seat)")
+    ap.add_argument("--profile-ticks", action="store_true",
+                    help="time the tick phases (admission / prefill / "
+                         "decode, plus the fused tick's sync / dispatch "
+                         "/ host / sample sub-phases) and print the "
+                         "breakdown after the run")
+    ap.add_argument("--postmortem", default=None, metavar="PATH",
+                    help="where a stall postmortem JSON is written "
+                         "(default: postmortem.json next to the run)")
+
+
+def telemetry_from_args(args) -> Optional[Telemetry]:
+    """Build one :class:`Telemetry` from ``add_telemetry_args`` flags,
+    or None when every flag is at its off default (keeping the engines
+    on the zero-overhead path)."""
+    wanted = (args.flight_recorder or args.trace_export
+              or args.profile_ticks or args.metrics_port is not None)
+    if not wanted:
+        return None
+    return Telemetry(ring=args.flight_recorder or 4096,
+                     profile=args.profile_ticks,
+                     postmortem_path=args.postmortem or "postmortem.json")
+
+
+def report_telemetry(args, telemetry: Optional[Telemetry],
+                     tag: str) -> None:
+    """Post-run telemetry outputs: the Perfetto export and the
+    tick-phase profile table."""
+    if telemetry is None:
+        return
+    rec = telemetry.recorder
+    if args.trace_export:
+        write_perfetto(args.trace_export, telemetry.events())
+        print(f"[{tag}] wrote Perfetto trace {args.trace_export} "
+              f"({rec.total} events recorded, {rec.dropped} aged out "
+              f"of the {rec.capacity}-event ring)")
+    if telemetry.profiler is not None:
+        snap = telemetry.profiler.snapshot()
+        print(f"[{tag}] tick-phase profile over {snap['ticks']} ticks:")
+        for phase, ph in snap["phases"].items():
+            print(f"[{tag}]   {phase:<16} {ph['total_s'] * 1e3:8.2f} ms "
+                  f"total  {ph['share'] * 100:5.1f}%")
 
 
 def add_kv_precision_args(ap: argparse.ArgumentParser) -> None:
@@ -509,6 +613,7 @@ def main():
     add_sampling_args(ap)
     add_slo_args(ap)
     add_kv_precision_args(ap)
+    add_telemetry_args(ap)
     args = ap.parse_args()
     apply_tuning_preset(args.tuning_preset)
     sampling = sampling_from_args(args)
@@ -517,6 +622,11 @@ def main():
                            if args.class_precision else None)
     except ValueError as e:
         ap.error(str(e))
+    telemetry = telemetry_from_args(args)
+    if telemetry is not None and not args.fleet and args.engine != "paged":
+        ap.error("--metrics-port/--flight-recorder/--trace-export/"
+                 "--profile-ticks need --engine paged or --fleet (the "
+                 "static batch path has no scheduler to observe)")
     if args.fleet:
         try:
             r = serve_fleet(args.models, requests=args.requests,
@@ -535,7 +645,9 @@ def main():
                             aging_ticks=args.aging_ticks,
                             selection=args.selection,
                             kv_dtype=args.kv_dtype,
-                            class_precision=class_precision)
+                            class_precision=class_precision,
+                            telemetry=telemetry,
+                            metrics_port=args.metrics_port)
         except ValueError as e:
             ap.error(str(e))
         m = r["metrics"]
@@ -557,6 +669,7 @@ def main():
         rid0 = min(r["finished"])
         print("[serve.fleet] sample tokens:",
               r["finished"][rid0].generated[:12])
+        report_telemetry(args, telemetry, "serve.fleet")
         return
     if args.engine == "paged":
         r = serve_paged(args.arch, requests=args.requests, gen=args.gen,
@@ -571,7 +684,9 @@ def main():
                         admission=args.admission,
                         aging_ticks=args.aging_ticks,
                         kv_dtype=args.kv_dtype,
-                        class_precision=class_precision)
+                        class_precision=class_precision,
+                        telemetry=telemetry,
+                        metrics_port=args.metrics_port)
         m = r["metrics"]
         print(f"[serve.paged] kv_dtype={m['kv_dtype']} "
               f"page_bytes={m['page_bytes']:.0f}")
@@ -591,6 +706,7 @@ def main():
                   f"deadline_misses={cm['deadline_misses']:.0f}")
         print("[serve.paged] sample tokens:",
               r["finished"][0].generated[:12])
+        report_telemetry(args, telemetry, "serve.paged")
         return
     r = serve(args.arch, batch=args.batch,
               prompt_len=args.prompt_len or 32,

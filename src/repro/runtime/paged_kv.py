@@ -62,6 +62,8 @@ import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
+from repro.runtime.telemetry import Histogram
+
 
 TokenTuple = Tuple[int, ...]
 
@@ -448,6 +450,14 @@ class EngineMetrics:
         dataclasses.field(default_factory=dict)
     tbt_misses_by_class: Dict[str, int] = \
         dataclasses.field(default_factory=dict)
+    # log-bucketed mergeable latency histograms (telemetry.Histogram),
+    # maintained next to the raw sample lists: replica histograms merge
+    # by pure bucket addition into fleet aggregates, and they are what
+    # the Prometheus exposition publishes as repro_{ttft,tbt}_seconds
+    ttft_hist_by_class: Dict[str, Histogram] = \
+        dataclasses.field(default_factory=dict)
+    tbt_hist_by_class: Dict[str, Histogram] = \
+        dataclasses.field(default_factory=dict)
     _t_start: Optional[float] = None
     _t_last: Optional[float] = None
 
@@ -455,7 +465,12 @@ class EngineMetrics:
         """Call at the START of the first tick so the throughput window
         includes the first tick's work (jit compile, first prefill).
         ``now`` lets an engine on a virtual clock stamp the window
-        deterministically (None = wall time)."""
+        deterministically (None = wall time).
+
+        Clock contract: the Scheduler always passes ``now=self.clock()``
+        here and in :meth:`tick`, so under an injected clock the
+        ``perf_counter`` fallback is never reached — it exists only for
+        callers driving EngineMetrics standalone."""
         if self._t_start is None:
             self._t_start = time.perf_counter() if now is None else now
 
@@ -469,6 +484,10 @@ class EngineMetrics:
         self.ttft_s.append(ttft)
         self.first_tokens += 1
         self.ttft_s_by_class.setdefault(priority, []).append(ttft)
+        h = self.ttft_hist_by_class.get(priority)
+        if h is None:
+            h = self.ttft_hist_by_class[priority] = Histogram()
+        h.observe(ttft)
         if deadlined:
             self.deadline_requests_by_class[priority] = \
                 self.deadline_requests_by_class.get(priority, 0) + 1
@@ -487,6 +506,10 @@ class EngineMetrics:
         ``decode_tokens`` counter is maintained by the engine itself —
         this method owns only the latency/deadline tallies."""
         self.tbt_s_by_class.setdefault(priority, []).append(tbt)
+        h = self.tbt_hist_by_class.get(priority)
+        if h is None:
+            h = self.tbt_hist_by_class[priority] = Histogram()
+        h.observe(tbt)
         if deadlined:
             self.tbt_deadline_tokens_by_class[priority] = \
                 self.tbt_deadline_tokens_by_class.get(priority, 0) + 1
@@ -510,6 +533,8 @@ class EngineMetrics:
              cached_pages: int = 0, evictions: int = 0,
              pages_by_class: Optional[Dict[str, int]] = None,
              now: Optional[float] = None) -> None:
+        # same clock contract as begin(): engine callers inject
+        # now=clock(); the wall-time fallback is for standalone use
         if now is None:
             now = time.perf_counter()
         if self._t_start is None:
@@ -569,6 +594,12 @@ class EngineMetrics:
                 out.ttft_s_by_class.setdefault(cls_name, []).extend(ts)
             for cls_name, ts in m.tbt_s_by_class.items():
                 out.tbt_s_by_class.setdefault(cls_name, []).extend(ts)
+            for acc, src in ((out.ttft_hist_by_class, m.ttft_hist_by_class),
+                             (out.tbt_hist_by_class, m.tbt_hist_by_class)):
+                for cls_name, h in src.items():
+                    prev = acc.get(cls_name)
+                    acc[cls_name] = h.merge(prev) if prev is not None \
+                        else h.merge(Histogram(h.base))
             for acc, src in (
                     (out.completed_by_class, m.completed_by_class),
                     (out.preemptions_by_class, m.preemptions_by_class),

@@ -366,7 +366,7 @@ class ModelFleet:
                  aging_ticks: int = 64,
                  class_precision: Optional[Dict[str, str]] = None,
                  clock=None, record_trace: bool = True,
-                 policy_cls: Optional[type] = None):
+                 telemetry=None, policy_cls: Optional[type] = None):
         """Build one engine per (model, replica) and carve the budget.
 
         Args:
@@ -390,6 +390,14 @@ class ModelFleet:
           record_trace: keep per-engine event traces (default); the
               load harness disables them to bound memory at 10⁵⁻⁶
               requests.
+          telemetry: one shared
+              :class:`~repro.runtime.telemetry.Telemetry` for the whole
+              fleet — every engine emits into its flight recorder with
+              its ``"model/replica"`` engine id, the router's outer
+              loop adds stride-gated ``fleet_tick`` heartbeat events
+              (queue depth / active seats / pages per engine), and a
+              fleet stall dumps a postmortem covering every engine
+              plus the :class:`HostBudget` grants.  None = off.
           policy_cls: placement-policy class per engine (None =
               :class:`~repro.runtime.serving.PagedPolicy`); the load
               harness passes ``workload.OraclePolicy``.
@@ -449,6 +457,7 @@ class ModelFleet:
         self._routes: Dict[int, Tuple[str, int]] = {}   # rid -> (model, idx)
         self._next_rid = 0
         self._tick = 0
+        self.telemetry = telemetry
         surplus_bytes = (total_pages - total_floor) * ref_bytes
         for fm, floor in floors:
             engines = []
@@ -467,7 +476,8 @@ class ModelFleet:
                     admission=admission, aging_ticks=aging_ticks,
                     kv_dtype=dt, class_precision=self.class_precision,
                     clock=clock, record_trace=record_trace,
-                    policy_cls=policy_cls)
+                    telemetry=telemetry, policy_cls=policy_cls)
+                eng.engine_id = f"{fm.name}/{i}"
                 self.budget.register((fm.name, i), eng.bm, floor)
                 engines.append(eng)
             group = ReplicaGroup(fm.name, fm.cfg, engines, floor)
@@ -603,6 +613,17 @@ class ModelFleet:
         for _, _, eng in self._engines():
             if eng.queue or eng.seats:
                 eng.step()
+        tel = self.telemetry
+        if tel is not None and self._tick % tel.heartbeat_every == 0:
+            # stride-gated heartbeat: one fleet_tick event per engine
+            # feeds the Perfetto counter tracks (queue depth, seats,
+            # pages) without growing the ring once per engine tick
+            for name, i, eng in self._engines():
+                tel.emit(self._tick, eng.clock(), f"{name}/{i}", -1,
+                         "fleet_tick",
+                         {"queued": len(eng.queue),
+                          "active": len(eng.seats),
+                          "pages_in_use": eng.policy.pages_in_use()})
 
     def run(self, max_ticks: Optional[int] = None) -> Dict[int, Request]:
         """Tick the fleet until every submitted request finishes.
@@ -627,9 +648,17 @@ class ModelFleet:
                 for r in sorted(list(eng.queue) + list(eng.seats.values()),
                                 key=lambda r: r.rid):
                     stalled.append(f"{name}/{i}:{r.rid}({r.priority})")
-            raise SchedulerStallError(
-                f"fleet run() exhausted max_ticks={max_ticks} with "
-                f"{len(stalled)} requests pending: " + ", ".join(stalled))
+            msg = (f"fleet run() exhausted max_ticks={max_ticks} with "
+                   f"{len(stalled)} requests pending: " + ", ".join(stalled))
+            if self.telemetry is not None:
+                # full-fleet postmortem: ring events + every engine's
+                # queue/seats/BlockManager partition + budget grants
+                self.telemetry.write_postmortem(
+                    "SchedulerStallError: " + msg,
+                    engines={f"{name}/{i}": eng
+                             for name, i, eng in self._engines()},
+                    budget=self.budget.usage())
+            raise SchedulerStallError(msg)
         return self.finished()
 
     def finished(self) -> Dict[int, Request]:

@@ -86,7 +86,18 @@ seats scanned in index order, priority-aware youngest-first preemption)
 so trace tests can assert exact interleavings.  ``trace`` records
 (tick, event, rid) tuples with events: admit / prefix_hit /
 prefill_chunk / first_token / decode / preempt / deadline_miss /
-finish.
+tbt_miss / finish.
+
+Every ``_trace`` site also feeds the optional structured telemetry
+plane (``telemetry=`` a :class:`~repro.runtime.telemetry.Telemetry`):
+the same events — plus a telemetry-only ``submit`` — land in a bounded
+ring-buffer flight recorder as :class:`~repro.runtime.telemetry.
+TraceEvent` records carrying injected-clock wall time, the engine id
+and small attrs, exportable as Perfetto span timelines and dumped with
+a full engine-state snapshot when ``run`` stalls.  With the default
+``telemetry=None`` the hot path pays one attribute load + None check
+per event (benchmark workload 9 gates the on/off throughput ratio).
+See ``docs/observability.md``.
 
 See ``docs/serving.md`` for the end-to-end architecture guide (tick
 loop, page lifecycle, prefix-cache CoW, lazy growth, preemption replay,
@@ -95,6 +106,7 @@ measure this stack.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -128,6 +140,11 @@ class SchedulerStallError(RuntimeError):
 PRIORITIES: Dict[str, int] = {"premium": 0, "standard": 1, "batch": 2}
 
 DEFAULT_PRIORITY = "standard"
+
+#: Reusable no-op context manager: the fused decode tick wraps its
+#: dispatch in ``jax.profiler.TraceAnnotation`` only while the tick
+#: profiler is live, and this stand-in keeps the unprofiled path free.
+_NULL_CTX = contextlib.nullcontext()
 
 
 def priority_level(req: "Request") -> int:
@@ -329,7 +346,7 @@ class Scheduler:
     def __init__(self, policy, *, max_seats: int,
                  sampler: Optional[Sampler] = None, page_capacity: int = 0,
                  admission="fcfs", aging_ticks: int = 64,
-                 clock=None, record_trace: bool = True):
+                 clock=None, record_trace: bool = True, telemetry=None):
         """Bind ``policy`` (the KV placement + model arithmetic) to a
         fresh scheduler.
 
@@ -361,6 +378,16 @@ class Scheduler:
               ``False`` sets ``trace = None`` and skips every append —
               at 10⁵⁻⁶-request harness scale the trace would dominate
               memory.
+          telemetry: optional
+              :class:`~repro.runtime.telemetry.Telemetry` — every
+              ``_trace`` site then also emits a structured
+              :class:`~repro.runtime.telemetry.TraceEvent` (injected-
+              clock time, ``engine_id``, attrs) into its flight
+              recorder, deadlined TTFT/TBT verdicts feed its SLO
+              burn-rate monitor, ``run`` dumps a postmortem through it
+              on a stall, and its tick profiler (when enabled) times
+              the step phases.  None (default) keeps the hot path at
+              one attribute load + None check per event.
 
         Raises:
           ValueError: unknown ``admission`` name or ``aging_ticks < 1``.
@@ -377,15 +404,26 @@ class Scheduler:
         self.metrics = EngineMetrics(page_capacity=page_capacity)
         self.trace: Optional[List[Tuple[int, str, int]]] = (
             [] if record_trace else None)
+        self.telemetry = telemetry
+        self.engine_id = ""       # the fleet labels replicas "model/i"
         self._next_rid = 0
         self._tick = 0
         policy.bind(self)
 
-    def _trace(self, event: str, rid: int) -> None:
+    def _trace(self, event: str, rid: int,
+               attrs: Optional[dict] = None) -> None:
         """Append one (tick, event, rid) trace tuple — no-op when the
-        trace is disabled (``record_trace=False``)."""
+        trace is disabled (``record_trace=False``) — and mirror the
+        event into the telemetry flight recorder when one is attached.
+        ``attrs`` never reaches the flat trace (parity tests pin its
+        exact tuples); hot callers pass None so the off path allocates
+        nothing."""
         if self.trace is not None:
             self.trace.append((self._tick, event, rid))
+        tel = self.telemetry
+        if tel is not None:
+            tel.emit(self._tick, self.clock(), self.engine_id, rid,
+                     event, attrs)
 
     # -- queue ---------------------------------------------------------------
 
@@ -458,6 +496,14 @@ class Scheduler:
         self._next_rid = rid + 1
         self.queue.append(req)
         self.metrics.submitted += 1
+        tel = self.telemetry
+        if tel is not None:
+            # telemetry-only event: the flat trace's exact tuple
+            # sequence is pinned by parity tests and starts at admit
+            tel.emit(self._tick, req.t_submit, self.engine_id, req.rid,
+                     "submit", {"priority": req.priority,
+                                "prompt_tokens": int(req.prompt.size),
+                                "max_new_tokens": req.max_new_tokens})
         return req.rid
 
     def _free_seats(self) -> List[int]:
@@ -481,7 +527,11 @@ class Scheduler:
             req.slot = seat
             self.seats[seat] = req
             self.metrics.admitted += 1
-            self._trace("admit", req.rid)
+            self._trace("admit", req.rid,
+                        None if self.telemetry is None else
+                        {"seat": seat, "priority": req.priority,
+                         "cached_tokens": req.cached_tokens,
+                         "preempted_before": req.times_preempted})
             if req.cached_tokens:
                 self.metrics.cached_prompt_tokens += req.cached_tokens
                 self._trace("prefix_hit", req.rid)
@@ -536,9 +586,17 @@ class Scheduler:
             self.metrics.note_first_token(
                 req.priority, ttft, deadlined=req.deadline_ms is not None,
                 missed=missed)
-            self._trace("first_token", req.rid)
+            tel = self.telemetry
+            self._trace("first_token", req.rid,
+                        None if tel is None else {"ttft_s": ttft})
+            if tel is not None and req.deadline_ms is not None:
+                tel.observe_slo(now, self._tick, self.engine_id,
+                                req.priority, "ttft", missed)
             if missed:
-                self._trace("deadline_miss", req.rid)
+                self._trace("deadline_miss", req.rid,
+                            None if tel is None else
+                            {"ttft_s": ttft,
+                             "deadline_ms": req.deadline_ms})
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if req.max_new_tokens <= 1 or hit_eos:
                 self.finish(req)
@@ -579,8 +637,15 @@ class Scheduler:
         self.metrics.note_decode_token(req.priority, tbt,
                                        deadlined=deadlined, missed=missed)
         self._trace("decode", req.rid)
+        tel = self.telemetry
+        if tel is not None and deadlined:
+            tel.observe_slo(now, self._tick, self.engine_id,
+                            req.priority, "tbt", missed)
         if missed:
-            self._trace("tbt_miss", req.rid)
+            self._trace("tbt_miss", req.rid,
+                        None if tel is None else
+                        {"tbt_s": tbt,
+                         "tbt_deadline_ms": req.tbt_deadline_ms})
         hit_eos = req.eos_id is not None and tok == req.eos_id
         if len(req.generated) >= req.max_new_tokens or hit_eos:
             self.finish(req)
@@ -660,12 +725,46 @@ class Scheduler:
     def step(self):
         """One engine tick: admission, one prefill round, one decode
         round, then a metrics sample (queue depth, active seats, page
-        occupancy overall and per priority class)."""
+        occupancy overall and per priority class).  When the attached
+        telemetry carries a live tick profiler the phases run through
+        :meth:`_step_profiled` instead (identical order and effects,
+        plus wall-time attribution)."""
+        tel = self.telemetry
+        if tel is not None and tel.profiler is not None:
+            return self._step_profiled(tel.profiler)
         self.metrics.begin(self.clock())
         self._tick += 1
         self._admit_from_queue()
         self.policy.prefill_tick()
         self.policy.decode_tick()
+        self._tick_bookkeeping()
+
+    def _step_profiled(self, prof):
+        """The tick with per-phase wall-time attribution
+        (``admission`` / ``prefill`` / ``decode`` / ``bookkeeping``;
+        the fused paged decode refines its share into ``decode/*``
+        sub-phases).  Measured with ``time.perf_counter`` — profiling
+        is a wall-time tool, deliberately not the injected clock, which
+        is virtual under the harness and would time every phase as 0."""
+        self.metrics.begin(self.clock())
+        self._tick += 1
+        t0 = time.perf_counter()
+        self._admit_from_queue()
+        t1 = time.perf_counter()
+        prof.add("admission", t1 - t0)
+        self.policy.prefill_tick()
+        t2 = time.perf_counter()
+        prof.add("prefill", t2 - t1)
+        self.policy.decode_tick()
+        t3 = time.perf_counter()
+        prof.add("decode", t3 - t2)
+        self._tick_bookkeeping()
+        prof.add("bookkeeping", time.perf_counter() - t3)
+        prof.note_tick()
+
+    def _tick_bookkeeping(self):
+        """The tick's closing metrics sample (shared by the plain and
+        profiled step paths)."""
         cached, evictions = self.policy.cache_stats()
         pages_by_class: Dict[str, int] = {}
         for r in self.seats.values():
@@ -701,11 +800,17 @@ class Scheduler:
         if self.queue or self.seats:
             stalled = sorted(list(self.queue) + list(self.seats.values()),
                              key=lambda r: r.rid)
-            raise SchedulerStallError(
-                f"run() exhausted max_ticks={max_ticks} with "
-                f"{len(self.queue)} queued and {len(self.seats)} active "
-                f"requests: "
-                + ", ".join(f"{r.rid}({r.priority})" for r in stalled))
+            msg = (f"run() exhausted max_ticks={max_ticks} with "
+                   f"{len(self.queue)} queued and {len(self.seats)} "
+                   f"active requests: "
+                   + ", ".join(f"{r.rid}({r.priority})" for r in stalled))
+            if self.telemetry is not None:
+                # dump the flight recorder + full engine state before
+                # raising: the stall is exactly when the evidence is hot
+                self.telemetry.write_postmortem(
+                    "SchedulerStallError: " + msg,
+                    engines={self.engine_id or "engine": self})
+            raise SchedulerStallError(msg)
         return self.finished
 
 
@@ -1321,20 +1426,44 @@ class PagedPolicy:
                 self.pos[s] += 1
                 sched._emit_decode_token(req, toks[s])
             return
+        # tick profiler: refine the step-level "decode" phase into
+        # sync (device-mirror rebuild) / dispatch (fused-call enqueue)
+        # / host (the ONE blocking token pull) / sample (host
+        # acceptance); perf_counter reads happen only while profiling
+        tel = sched.telemetry
+        prof = None if tel is None else tel.profiler
+        t0 = time.perf_counter() if prof is not None else 0.0
         if self._dirty:
             self._sync_device()
+            if prof is not None:
+                now = time.perf_counter()
+                prof.add("decode/sync", now - t0)
+                t0 = now
         d = self._dev
-        toks_dev, self.cache, d["pos"], d["step"], d["table"] = \
-            self._fused_fn(self.params, self.cache, d["last"], d["pos"],
-                           d["table"], d["nv"], d["temp"], d["top_k"],
-                           d["top_p"], d["seed"], d["rid"], d["step"])
+        with (jax.profiler.TraceAnnotation("fused_decode_tick")
+              if prof is not None else _NULL_CTX):
+            toks_dev, self.cache, d["pos"], d["step"], d["table"] = \
+                self._fused_fn(self.params, self.cache, d["last"],
+                               d["pos"], d["table"], d["nv"], d["temp"],
+                               d["top_k"], d["top_p"], d["seed"],
+                               d["rid"], d["step"])
         d["last"] = toks_dev             # this tick's token = next input
+        if prof is not None:
+            now = time.perf_counter()
+            prof.add("decode/dispatch", now - t0)
+            t0 = now
         # the tick's ONE device->host sync
         toks = np.asarray(toks_dev)  # repro-lint: disable=RL001
+        if prof is not None:
+            now = time.perf_counter()
+            prof.add("decode/host", now - t0)
+            t0 = now
         for s in decoding:
             req = sched.seats[s]
             self.pos[s] += 1
             sched._emit_decode_token(req, int(toks[s]))
+        if prof is not None:
+            prof.add("decode/sample", time.perf_counter() - t0)
 
 
 # ---------------------------------------------------------------------------
@@ -1357,12 +1486,13 @@ class ServingEngine(Scheduler):
                  opts: Optional[M.RunOptions] = None,
                  sampler: Optional[Sampler] = None,
                  admission="fcfs", aging_ticks: int = 64,
-                 clock=None, record_trace: bool = True):
+                 clock=None, record_trace: bool = True, telemetry=None):
         policy = FixedSlotPolicy(cfg, params, slots=slots, max_len=max_len,
                                  rules=rules, opts=opts)
         super().__init__(policy, max_seats=slots, sampler=sampler,
                          admission=admission, aging_ticks=aging_ticks,
-                         clock=clock, record_trace=record_trace)
+                         clock=clock, record_trace=record_trace,
+                         telemetry=telemetry)
         self.cfg = cfg
         self.params = params
         self.B = slots
@@ -1428,7 +1558,7 @@ class PagedServingEngine(Scheduler):
                  kv_dtype: Optional[str] = None,
                  class_precision: Optional[Dict[str, str]] = None,
                  clock=None, record_trace: bool = True,
-                 policy_cls: Optional[type] = None):
+                 telemetry=None, policy_cls: Optional[type] = None):
         # policy_cls swaps the placement+arithmetic implementation while
         # keeping every Scheduler behavior: the load harness passes
         # workload.OraclePolicy (model-free hash logits) here
@@ -1444,7 +1574,8 @@ class PagedServingEngine(Scheduler):
         super().__init__(policy, max_seats=max_seats, sampler=sampler,
                          page_capacity=policy.bm.capacity,
                          admission=admission, aging_ticks=aging_ticks,
-                         clock=clock, record_trace=record_trace)
+                         clock=clock, record_trace=record_trace,
+                         telemetry=telemetry)
         self.metrics.kv_dtype = policy.kv_dtype_name
         self.metrics.page_bytes = policy.page_bytes
         self.cfg = cfg

@@ -415,13 +415,18 @@ def oracle_fleet(spec: WorkloadSpec, *, replicas: int = 1,
                  selection: str = "slo-aware", admission: str = "slo",
                  aging_ticks: int = 64,
                  clock: Optional[VirtualClock] = None,
-                 record_trace: bool = False) -> ModelFleet:
+                 record_trace: bool = False,
+                 telemetry=None) -> ModelFleet:
     """A :class:`~repro.runtime.router.ModelFleet` of oracle engines
     sized for ``spec`` — one model entry per ``spec.models`` key,
     ``replicas`` engines each, sharing ``total_pages`` under one
     :class:`~repro.runtime.router.HostBudget`.  Traces default OFF
     (memory at 10⁵⁻⁶ requests) and the clock defaults to a fresh
-    :class:`VirtualClock`."""
+    :class:`VirtualClock`.  ``telemetry`` (a
+    :class:`~repro.runtime.telemetry.Telemetry`) attaches the flight
+    recorder / postmortem plane; under the virtual clock every
+    telemetry timestamp is deterministic virtual time, so span
+    timelines are exact functions of the schedule."""
     cfg = tiny_paged_cfg()
     models = [FleetModel(name=m, cfg=cfg, params=None, replicas=replicas)
               for m in spec.models]
@@ -431,7 +436,8 @@ def oracle_fleet(spec: WorkloadSpec, *, replicas: int = 1,
         prefill_chunk=prefill_chunk, selection=selection,
         admission=admission, aging_ticks=aging_ticks,
         clock=clock if clock is not None else VirtualClock(),
-        record_trace=record_trace, policy_cls=OraclePolicy)
+        record_trace=record_trace, telemetry=telemetry,
+        policy_cls=OraclePolicy)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,480 @@
+"""Telemetry plane: flight recorder, postmortems, Perfetto export,
+mergeable histograms, burn-rate alerting, Prometheus exposition.
+
+The load-bearing claims pinned here:
+  - a forced scheduler stall writes a postmortem whose flight recorder
+    names the stalled rid and whose BlockManager snapshot is
+    partition-consistent (free + reclaimable + live cover every page
+    exactly once);
+  - the Perfetto export of a run with preemptions is schema-valid
+    Chrome trace JSON, contains preempt instants and replay spans, and
+    round-trips through scripts/trace_view.py;
+  - Histogram.merge is associative and commutative, and
+    quantile_bucket agrees bucket-for-bucket with the exact
+    nearest-rank sample quantile (EngineMetrics' _quantile);
+  - telemetry is free when on: the flat (tick, event, rid) trace and
+    the generated tokens are identical with telemetry on vs off.
+"""
+import json
+import sys
+import urllib.request
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.runtime.paged_kv import _quantile  # noqa: E402
+from repro.runtime.serving import SchedulerStallError  # noqa: E402
+from repro.runtime.telemetry import (  # noqa: E402
+    ZERO_BUCKET, BurnRateMonitor, FlightRecorder, Histogram, MetricsRegistry,
+    MetricsServer, Telemetry, TickProfiler, TraceEvent, block_manager_state,
+    build_spans, event_from_dict, perfetto_trace, prometheus_text,
+    validate_chrome_trace, write_perfetto)
+from repro.runtime.workload import (  # noqa: E402
+    VirtualClock, generate_workload, oracle_fleet, spec_from_args)
+
+SCRIPTS = Path(__file__).resolve().parent.parent / "scripts"
+sys.path.insert(0, str(SCRIPTS))
+import trace_view  # noqa: E402
+
+
+def _spec(requests=60, seed=0):
+    import argparse
+
+    from repro.runtime.workload import add_workload_args
+    p = argparse.ArgumentParser()
+    add_workload_args(p)
+    return spec_from_args(p.parse_args([]), requests=requests)
+
+
+def _drive(spec, *, total_pages=64, telemetry=None, record_trace=False,
+           seed=0):
+    from benchmarks.load_harness import drive_workload
+    clock = VirtualClock()
+    fleet = oracle_fleet(spec, replicas=1, total_pages=total_pages,
+                         clock=clock, telemetry=telemetry,
+                         record_trace=record_trace)
+    res = drive_workload(fleet, generate_workload(spec, seed), clock)
+    return fleet, res
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder ring
+# ---------------------------------------------------------------------------
+
+class TestFlightRecorder:
+    def test_ring_bounds_and_drop_count(self):
+        fr = FlightRecorder(capacity=4)
+        for i in range(10):
+            fr.append(TraceEvent(i, float(i), "e", i, "decode", None))
+        evs = fr.events()
+        assert len(evs) == 4
+        assert [e.tick for e in evs] == [6, 7, 8, 9]   # oldest dropped
+        assert fr.total == 10 and fr.dropped == 6
+        snap = fr.snapshot()
+        assert snap["capacity"] == 4 and snap["dropped"] == 6
+        assert [d["tick"] for d in snap["events"]] == [6, 7, 8, 9]
+
+    def test_event_dict_round_trip(self):
+        ev = TraceEvent(3, 1.5, "m0/0", 7, "admit", {"seat": 2})
+        assert event_from_dict(ev.to_dict()) == ev
+        bare = TraceEvent(0, 0.0, "e", 1, "finish", None)
+        assert "attrs" not in bare.to_dict()
+        assert event_from_dict(bare.to_dict()) == bare
+
+    def test_capacity_validated(self):
+        with pytest.raises(ValueError):
+            FlightRecorder(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# Forced stall → postmortem
+# ---------------------------------------------------------------------------
+
+class TestPostmortem:
+    def test_stall_writes_postmortem_with_stalled_rid(self, tmp_path):
+        pm_path = tmp_path / "pm.json"
+        tel = Telemetry(ring=256, postmortem_path=str(pm_path))
+        spec = _spec(requests=4)
+        clock = VirtualClock()
+        fleet = oracle_fleet(spec, replicas=1, total_pages=32,
+                             clock=clock, telemetry=tel)
+        model = next(iter(spec.models))
+        import numpy as np
+        rid = fleet.submit(model=model,
+                           prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=8)
+        with pytest.raises(SchedulerStallError):
+            fleet.run(max_ticks=1)
+
+        assert pm_path.exists()
+        pm = json.loads(pm_path.read_text())
+        assert pm["reason"].startswith("SchedulerStallError")
+        # the stalled rid appears in the engine snapshot
+        eng_state = pm["engines"][f"{model}/0"]
+        seated = [int(r) for r in eng_state["seats"]]
+        queued = [r["rid"] for r in eng_state["queue"]]
+        assert rid in seated + queued
+        # and in the flight-recorder events (it was admitted)
+        rids = {d["rid"] for d in pm["flight_recorder"]["events"]}
+        assert rid in rids
+        # fleet postmortem carries the budget snapshot
+        assert "budget" in pm
+        assert tel.last_postmortem is pm or tel.last_postmortem["reason"] \
+            == pm["reason"]
+
+    def test_block_manager_snapshot_partition_consistent(self, tmp_path):
+        tel = Telemetry(ring=256, postmortem_path=str(tmp_path / "p.json"))
+        spec = _spec(requests=4)
+        clock = VirtualClock()
+        fleet = oracle_fleet(spec, replicas=1, total_pages=32,
+                             clock=clock, telemetry=tel)
+        model = next(iter(spec.models))
+        import numpy as np
+        fleet.submit(model=model, prompt=np.arange(6, dtype=np.int32),
+                     max_new_tokens=8)
+        with pytest.raises(SchedulerStallError):
+            fleet.run(max_ticks=1)
+        bm = tel.last_postmortem["engines"][f"{model}/0"]["block_manager"]
+        assert bm["partition_ok"] is True
+        covered = (len(bm["free"]) + len(bm["reclaimable"])
+                   + len(bm["live_refcounts"]))
+        assert covered == bm["capacity"]
+
+    def test_block_manager_state_direct(self):
+        from repro.runtime.paged_kv import BlockManager
+        bm = BlockManager(num_pages=8, page_size=4)
+        pages = bm.alloc(3, rid=1)
+        st_ = block_manager_state(bm)
+        assert st_["partition_ok"] is True
+        assert st_["capacity"] == 7          # page 0 is scratch
+        assert st_["in_use"] == 3
+        assert sorted(int(k) for k in st_["live_refcounts"]) == \
+            sorted(pages)
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export + trace_view round trip
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def preemption_run():
+    """A tight-pages oracle run that preempts and replays requests."""
+    tel = Telemetry(ring=8192)
+    spec = _spec(requests=80)
+    fleet, res = _drive(spec, total_pages=24, telemetry=tel)
+    events = tel.events()
+    kinds = {e.kind for e in events}
+    assert "preempt" in kinds, "fixture must produce preemptions"
+    return tel, events
+
+
+class TestPerfetto:
+    def test_chrome_trace_validates(self, preemption_run, tmp_path):
+        _, events = preemption_run
+        doc = perfetto_trace(events)
+        assert validate_chrome_trace(doc) == []
+        assert doc["displayTimeUnit"] == "ms"
+        path = tmp_path / "trace.json"
+        write_perfetto(str(path), events)
+        assert validate_chrome_trace(json.loads(path.read_text())) == []
+
+    def test_preempt_and_replay_visible(self, preemption_run):
+        _, events = preemption_run
+        built = build_spans(events)
+        names = {sp["name"] for sp in built["spans"]}
+        assert {"queued", "prefill", "decode", "replay"} <= names
+        preempts = [i for i in built["instants"] if i["kind"] == "preempt"]
+        assert preempts
+        # every preempted rid later gets a replay span
+        replay_rids = {sp["rid"] for sp in built["spans"]
+                       if sp["name"] == "replay"}
+        assert {i["rid"] for i in preempts} <= replay_rids
+        doc = perfetto_trace(events)
+        x_names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+        i_names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "i"}
+        assert "replay" in x_names and "preempt" in i_names
+
+    def test_span_tracks_one_per_seat(self, preemption_run):
+        _, events = preemption_run
+        doc = perfetto_trace(events)
+        tids = {e["tid"] for e in doc["traceEvents"] if e["ph"] == "X"}
+        assert 0 in tids            # queue track
+        assert any(t > 0 for t in tids)     # seat tracks
+        thread_names = {(e["pid"], e["tid"]): e["args"]["name"]
+                        for e in doc["traceEvents"]
+                        if e["ph"] == "M" and e["name"] == "thread_name"}
+        for (pid, tid), name in thread_names.items():
+            assert name == "queue" if tid == 0 else name.startswith("seat")
+
+    def test_trace_view_round_trip(self, preemption_run, tmp_path):
+        tel, events = preemption_run
+        # Perfetto input
+        ptrace = tmp_path / "trace.json"
+        write_perfetto(str(ptrace), events)
+        spans_p, inst_p = trace_view.load_trace(str(ptrace))
+        # flight-recorder / postmortem input
+        pm = tmp_path / "pm.json"
+        pm.write_text(json.dumps(tel.postmortem("round trip"), default=str))
+        spans_f, inst_f = trace_view.load_trace(str(pm))
+        assert len(spans_p) == len(spans_f)
+        assert len(inst_p) == len(inst_f)
+        out = trace_view.render(spans_f, inst_f)
+        assert "replay" in out and "preempt" in out
+        rid = next(i["rid"] for i in inst_f if i["kind"] == "preempt")
+        md = trace_view.render(spans_p, inst_p, rid=rid, fmt="md")
+        assert f"### rid {rid}" in md and "| replay |" in md
+
+    def test_trace_view_rejects_garbage(self, tmp_path):
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({"nope": 1}))
+        with pytest.raises(SystemExit):
+            trace_view.load_trace(str(bad))
+
+
+# ---------------------------------------------------------------------------
+# Histograms: merge laws + quantile contract vs EngineMetrics._quantile
+# ---------------------------------------------------------------------------
+
+pos_floats = st.floats(min_value=1e-6, max_value=1e6,
+                       allow_nan=False, allow_infinity=False)
+
+
+class TestHistogram:
+    def test_bucket_edges(self):
+        h = Histogram(base=2.0)
+        assert h.bucket_index(0.0) == ZERO_BUCKET
+        assert h.bucket_index(-1.0) == ZERO_BUCKET
+        assert h.bucket_index(1.0) == 0          # (0.5, 1] -> 2^0
+        assert h.bucket_index(1.5) == 1
+        assert h.bucket_index(2.0) == 1          # boundary goes low
+        assert h.bucket_le(ZERO_BUCKET) == 0.0
+        assert h.bucket_le(3) == 8.0
+
+    def test_merge_base_mismatch(self):
+        with pytest.raises(ValueError):
+            Histogram(base=2.0).merge(Histogram(base=10.0))
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(pos_floats, min_size=1, max_size=40),
+           st.lists(pos_floats, min_size=0, max_size=40),
+           st.lists(pos_floats, min_size=0, max_size=40))
+    def test_merge_associative_commutative(self, xs, ys, zs):
+        def mk(vals):
+            h = Histogram()
+            for v in vals:
+                h.observe(v)
+            return h
+        a, b, c = mk(xs), mk(ys), mk(zs)
+        ab_c = a.merge(b).merge(c)
+        a_bc = a.merge(b.merge(c))
+        ba = b.merge(a)
+        assert ab_c.counts == a_bc.counts
+        assert a.merge(b).counts == ba.counts
+        assert ab_c.count == len(xs) + len(ys) + len(zs)
+        assert ab_c.sum == pytest.approx(sum(xs) + sum(ys) + sum(zs))
+        # merge is pure: operands unchanged
+        assert a.count == len(xs) and b.count == len(ys)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(pos_floats, min_size=1, max_size=50),
+           st.sampled_from([0.5, 0.9, 0.95, 0.99, 1.0]))
+    def test_quantile_bucket_matches_exact_quantile(self, xs, q):
+        h = Histogram()
+        for x in xs:
+            h.observe(x)
+        exact = _quantile(xs, q)
+        assert h.quantile_bucket(q) == h.bucket_index(exact)
+        assert h.quantile_bound(q) >= exact or \
+            h.quantile_bucket(q) == ZERO_BUCKET
+
+    def test_quantile_empty(self):
+        assert Histogram().quantile_bucket(0.5) is None
+
+    def test_json_round_trip(self):
+        h = Histogram()
+        for v in (0.001, 0.5, 3.0, 3.0, 100.0):
+            h.observe(v)
+        h2 = Histogram.from_dict(h.to_dict())
+        assert h2.counts == h.counts and h2.count == h.count
+        assert h2.sum == h.sum and h2.base == h.base
+
+
+# ---------------------------------------------------------------------------
+# Burn-rate monitor: window boundary + edge triggering
+# ---------------------------------------------------------------------------
+
+class TestBurnRate:
+    def test_window_boundary_strict_eviction(self):
+        m = BurnRateMonitor(window_s=1.0, threshold=0.5, min_samples=2)
+        m.observe(0.0, "rt", "ttft", True)
+        m.observe(0.0, "rt", "ttft", True)
+        # at now = 0.999 the t=0 samples are still inside the window
+        rates = m.rates(0.999)
+        assert rates["rt/ttft"]["samples"] == 2
+        # at now = 1.0 the boundary is exclusive: t <= now - window evicts
+        rates = m.rates(1.0)
+        assert "rt/ttft" not in rates or rates["rt/ttft"]["samples"] == 0
+
+    def test_edge_triggered_fire_then_clear(self):
+        m = BurnRateMonitor(window_s=10.0, threshold=0.5, min_samples=2)
+        assert m.observe(0.0, "rt", "tbt", True) is None   # n=1 < min
+        alert = m.observe(0.1, "rt", "tbt", True)          # rate 1.0 fires
+        assert alert and alert["state"] == "fire"
+        assert alert["class"] == "rt" and alert["kind"] == "tbt"
+        assert alert["miss_rate"] == 1.0
+        # still burning: no repeat alert
+        assert m.observe(0.2, "rt", "tbt", True) is None
+        # recover: hits push the rate under threshold -> one clear
+        cleared = None
+        t = 0.3
+        while cleared is None and t < 5.0:
+            cleared = m.observe(t, "rt", "tbt", False)
+            t += 0.1
+        assert cleared and cleared["state"] == "clear"
+        assert m.observe(t, "rt", "tbt", False) is None    # stays clear
+
+    def test_classes_independent(self):
+        m = BurnRateMonitor(window_s=10.0, threshold=0.5, min_samples=2)
+        m.observe(0.0, "rt", "ttft", True)
+        m.observe(0.0, "batch", "ttft", False)
+        m.observe(0.1, "batch", "ttft", False)
+        alert = m.observe(0.1, "rt", "ttft", True)
+        assert alert and alert["class"] == "rt"
+        assert m.rates(0.2)["batch/ttft"]["miss_rate"] == 0.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            BurnRateMonitor(window_s=0.0)
+        with pytest.raises(ValueError):
+            BurnRateMonitor(threshold=1.5)
+
+    def test_observe_slo_emits_burn_events(self):
+        tel = Telemetry(ring=64, burn_window_s=10.0, burn_threshold=0.5,
+                        burn_min_samples=2)
+        tel.observe_slo(0.0, 1, "e", "rt", "ttft", True)
+        tel.observe_slo(0.1, 2, "e", "rt", "ttft", True)
+        kinds = [e.kind for e in tel.events()]
+        assert kinds == ["slo_burn"]
+        ev = tel.events()[0]
+        assert ev.rid == -1 and ev.attrs["class"] == "rt"
+        assert "state" not in ev.attrs            # popped into the kind
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry + Prometheus exposition + HTTP server
+# ---------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_registry_renders_prometheus_text(self):
+        reg = MetricsRegistry()
+        reg.counter("repro_ticks_total", 5, {"engine": "e0"}, help="ticks")
+        reg.gauge("repro_pages_in_use", 7.0, {"engine": "e0"})
+        h = Histogram()
+        for v in (0.1, 0.2, 0.4):
+            h.observe(v)
+        reg.histogram("repro_ttft_seconds", h, {"engine": "e0"})
+        text = reg.render()
+        assert "# TYPE repro_ticks_total counter" in text
+        assert 'repro_ticks_total{engine="e0"} 5' in text
+        assert "# TYPE repro_ttft_seconds histogram" in text
+        assert 'le="+Inf"' in text
+        assert "repro_ttft_seconds_count" in text
+        # cumulative buckets: last finite bucket == count
+        inf_line = [l for l in text.splitlines() if 'le="+Inf"' in l][0]
+        assert inf_line.endswith(" 3")
+        with pytest.raises(ValueError):
+            reg.gauge("repro_ticks_total", 1.0)   # type collision
+
+    def test_exposition_from_real_run(self):
+        spec = _spec(requests=40)
+        fleet, _ = _drive(spec, telemetry=Telemetry(ring=256))
+        text = prometheus_text(
+            {f"{n}/{i}": e.metrics for n, i, e in fleet._engines()})
+        assert "repro_requests_completed_total" in text
+        assert 'repro_ttft_seconds_bucket{class=' in text
+        assert "repro_slo_misses_total" in text or True  # only if misses
+
+    def test_metrics_server_serves_and_404s(self):
+        reg_text = ["# boot\n"]
+        srv = MetricsServer(lambda: reg_text[0], port=0)
+        try:
+            with urllib.request.urlopen(srv.url) as resp:
+                assert resp.status == 200
+                assert "version=0.0.4" in resp.headers["Content-Type"]
+                assert resp.read().decode() == "# boot\n"
+            reg_text[0] = "repro_ticks_total 9\n"
+            with urllib.request.urlopen(srv.url) as resp:
+                assert b"repro_ticks_total 9" in resp.read()
+            bad = srv.url.replace("/metrics", "/nope")
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(bad)
+            assert ei.value.code == 404
+        finally:
+            srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Tick profiler
+# ---------------------------------------------------------------------------
+
+class TestTickProfiler:
+    def test_snapshot_shares_over_top_level_phases(self):
+        """decode/* re-slices wall already counted under decode, so the
+        share denominator is the top-level sum only — no dilution."""
+        p = TickProfiler()
+        p.add("admission", 0.25)
+        p.add("decode", 0.75)
+        p.add("decode/dispatch", 0.5)
+        p.add("decode/host", 0.25)
+        p.note_tick()
+        snap = p.snapshot()
+        assert snap["ticks"] == 1
+        top = sum(ph["share"] for name, ph in snap["phases"].items()
+                  if "/" not in name)
+        assert top == pytest.approx(1.0)
+        assert snap["phases"]["decode"]["share"] == pytest.approx(0.75)
+        assert snap["phases"]["decode/dispatch"]["share"] == \
+            pytest.approx(0.5)
+
+    def test_profiled_step_records_phases(self):
+        tel = Telemetry(ring=256, profile=True)
+        spec = _spec(requests=20)
+        _drive(spec, telemetry=tel)
+        snap = tel.profiler.snapshot()
+        assert snap["ticks"] > 0
+        assert "admission" in snap["phases"]
+        assert "bookkeeping" in snap["phases"]
+
+
+# ---------------------------------------------------------------------------
+# Telemetry must be free: identical flat trace + tokens, on vs off
+# ---------------------------------------------------------------------------
+
+class TestZeroIntrusion:
+    def test_flat_trace_and_tokens_identical_on_vs_off(self):
+        spec = _spec(requests=40)
+        fleet_off, _ = _drive(spec, record_trace=True, telemetry=None)
+        fleet_on, _ = _drive(spec, record_trace=True,
+                             telemetry=Telemetry(ring=4096, profile=True))
+        engs_off = [e for _, _, e in fleet_off._engines()]
+        engs_on = [e for _, _, e in fleet_on._engines()]
+        for a, b in zip(engs_off, engs_on):
+            assert a.trace == b.trace
+        toks_off = {rid: r.generated
+                    for rid, r in fleet_off.finished().items()}
+        toks_on = {rid: r.generated
+                   for rid, r in fleet_on.finished().items()}
+        assert toks_off == toks_on
+
+    def test_submit_event_is_telemetry_only(self):
+        """`submit` must never appear in the flat trace (its tuple shape
+        is pinned by parity tests) — telemetry ring only."""
+        tel = Telemetry(ring=4096)
+        spec = _spec(requests=20)
+        fleet, _ = _drive(spec, record_trace=True, telemetry=tel)
+        for _, _, eng in fleet._engines():
+            assert all(ev[1] != "submit" for ev in eng.trace)
+        assert any(e.kind == "submit" for e in tel.events())
